@@ -1,0 +1,27 @@
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints human-readable tables followed by ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks.tables import (fig8_perfsim, fig8_speed_scaling,
+                                   pipeline_table, table3_funcsim,
+                                   table5_vs_decoupled, table6_incremental)
+    rows = []
+    rows += table3_funcsim()
+    rows += fig8_perfsim()
+    rows += fig8_speed_scaling()
+    rows += table5_vs_decoupled()
+    rows += table6_incremental()
+    rows += pipeline_table()
+    print("\n== CSV (name,us_per_call,derived) ==")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""End-to-end training driver: a ~reduced smollm for a few hundred steps with
+checkpoint/restart (kill it mid-run and re-launch: it resumes exactly).
+
+    PYTHONPATH=src python examples/train_smollm.py --steps 300
+
+This is the runnable end-to-end example required by deliverable (b); the
+full-scale path is ``python -m repro.launch.train --arch smollm-135m``.
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "smollm-135m", "--smoke",
+           "--steps", str(args.steps), "--batch", "8", "--seq", "128",
+           "--ckpt-every", "100", "--log-every", "20"]
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

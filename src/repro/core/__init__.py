@@ -1,0 +1,31 @@
+"""OmniSim core: coupled functionality + performance simulation of dataflow
+hardware designs (Sarkar & Hao, MICRO'25), adapted to a JAX/TPU stack.
+
+Public API:
+
+    from repro.core import (Program, Read, Write, ReadNB, WriteNB, Empty,
+                            Full, Delay, Emit, simulate, simulate_rtl,
+                            LightningSim, csim, resimulate, classify)
+"""
+from .engine import OmniSim, simulate
+from .events import (Constraint, DeadlockError, NodeKind, Query, RequestType,
+                     SimStats, UnsupportedDesignError)
+from .graph import (SimGraph, level_schedule, longest_path_numpy,
+                    longest_path_python, to_dense_blocks)
+from .incremental import IncrementalOutcome, resimulate
+from .lightningsim import CSimCrash, LightningSim, csim
+from .program import (Delay, Emit, Empty, Fifo, Full, Module, Op, Program,
+                      Read, ReadNB, SimResult, Write, WriteNB)
+from .rtlsim import simulate_rtl
+from .taxonomy import Classification, classify, classify_dynamic
+
+__all__ = [
+    "OmniSim", "simulate", "simulate_rtl", "LightningSim", "csim",
+    "resimulate", "classify", "Classification", "IncrementalOutcome",
+    "Program", "Fifo", "Module", "Op", "Read", "Write", "ReadNB", "WriteNB",
+    "Empty", "Full", "Delay", "Emit", "SimResult", "SimGraph",
+    "longest_path_numpy", "longest_path_python", "level_schedule",
+    "to_dense_blocks", "Constraint", "DeadlockError", "Query", "RequestType",
+    "NodeKind", "SimStats", "UnsupportedDesignError", "CSimCrash",
+    "classify_dynamic",
+]

@@ -1,0 +1,102 @@
+"""FIFO read/write timing tables — data structure (D) of paper Fig. 7.
+
+Each FIFO keeps the ordered list of committed write/read events (node
+indices into the simulation graph) plus the value payloads in flight.  The
+tables answer the Perf Sim orchestrator's resolution questions of Table 2:
+
+  * NB write, w-th write, FIFO size S:  succeeds iff  w <= S  or the
+    (w-S)-th read committed *strictly before* the write's cycle.
+  * NB read, r-th read: succeeds iff the r-th write committed strictly
+    before the read's cycle.
+
+The strict-before rule is what makes functionality cycle-dependent for
+Type C designs: comparing *hardware* cycles recorded here — not executor
+scheduling order — is the paper's core correctness mechanism.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, List, Optional
+
+
+class FifoTable:
+    __slots__ = ("fid", "name", "depth", "writes", "reads", "values",
+                 "write_times", "read_times")
+
+    def __init__(self, fid: int, name: str, depth: int):
+        self.fid = fid
+        self.name = name
+        self.depth = depth
+        self.writes: List[int] = []       # node idx of each committed write
+        self.reads: List[int] = []        # node idx of each committed read
+        self.write_times: List[int] = []  # cycle of each committed write
+        self.read_times: List[int] = []   # cycle of each committed read
+        self.values: deque = deque()      # payloads not yet consumed
+
+    # -- commits -------------------------------------------------------------
+    def commit_write(self, node_idx: int, time: int, value: Any) -> int:
+        """Returns the 1-based write sequence number."""
+        self.writes.append(node_idx)
+        self.write_times.append(time)
+        self.values.append(value)
+        return len(self.writes)
+
+    def commit_read(self, node_idx: int, time: int) -> Any:
+        self.reads.append(node_idx)
+        self.read_times.append(time)
+        return self.values.popleft()
+
+    # -- counters --------------------------------------------------------------
+    @property
+    def n_writes(self) -> int:
+        return len(self.writes)
+
+    @property
+    def n_reads(self) -> int:
+        return len(self.reads)
+
+    # -- Table 2 resolution ----------------------------------------------------
+    def write_target_read(self, w: int) -> Optional[int]:
+        """Index (0-based into reads) of the read the w-th write must follow,
+        or None if the write trivially fits (w <= S)."""
+        if w <= self.depth:
+            return None
+        return w - self.depth - 1  # (w-S)-th read, 0-based
+
+    def can_write_at(self, w: int, t: int) -> Optional[bool]:
+        """Can the w-th write commit at cycle t?  None = target still unknown."""
+        tgt = self.write_target_read(w)
+        if tgt is None:
+            return True
+        if tgt >= len(self.read_times):
+            return None                      # target read not yet simulated
+        return self.read_times[tgt] < t      # strictly after the target
+
+    def can_read_at(self, r: int, t: int) -> Optional[bool]:
+        """Can the r-th read commit at cycle t?  None = target still unknown."""
+        tgt = r - 1                          # r-th write, 0-based
+        if tgt >= len(self.write_times):
+            return None
+        return self.write_times[tgt] < t
+
+    def occupancy_at(self, t: int) -> Optional[int]:
+        """Number of elements present at cycle t, or None if not yet decidable.
+
+        Decidable when we know all writes/reads with time < t have been
+        simulated — conservatively, the orchestrator only calls this at
+        quiescence where the earliest-query rule guarantees decidability.
+        """
+        w = sum(1 for x in self.write_times if x < t)
+        r = sum(1 for x in self.read_times if x < t)
+        return w - r
+
+    def earliest_write_time(self, r: int) -> Optional[int]:
+        """Commit cycle of the r-th write (0-based tgt = r-1), if known."""
+        if r - 1 < len(self.write_times):
+            return self.write_times[r - 1]
+        return None
+
+    def earliest_read_time(self, idx0: int) -> Optional[int]:
+        if idx0 < len(self.read_times):
+            return self.read_times[idx0]
+        return None

@@ -1,0 +1,219 @@
+"""Incremental re-simulation on FIFO-depth changes (paper Sec. 7.2).
+
+Unlike the decoupled baseline — whose simulation graph is depth-independent
+for Type A designs — the OmniSim graph is built *under* specific depths, so
+reuse must be validated.  The paper's mechanism, reproduced here:
+
+  1. strip the depth-dependent write-after-read (WAR) edges and regenerate
+     them from the FIFO tables for the new depths;
+  2. re-run Finalization (longest path) to get new node times;
+  3. re-evaluate every stored *constraint* (the recorded outcome of each NB
+     query / status probe, Table 2 semantics) against the new times;
+  4. all constraints hold → the graph is reusable: report the new cycle
+     count in microseconds;  any constraint flips → control/data flow would
+     diverge → a full re-simulation is required.
+
+Infeasibility is also detected structurally: a committed blocking write
+whose (w - S')-th target read never occurred can never commit under the new
+depths (deadlock), and regenerated WAR edges that create a cycle mean the
+old event order cannot be replayed; both force a full re-sim.
+"""
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from .engine import OmniSim, SEQ, RAW, WAR, simulate
+from .events import RequestType
+from .graph import longest_path_chains, longest_path_numpy
+from .program import SimResult
+
+
+@dataclass
+class IncrementalOutcome:
+    ok: bool                       # constraints satisfied → graph reused
+    reason: str
+    elapsed_s: float
+    result: Optional[SimResult]    # reused-graph result (ok) or None
+    violated: int = 0
+
+
+def _cache_base_arrays(engine: OmniSim):
+    """One-time numpy caches on the engine: base (SEQ+RAW) edge arrays,
+    per-FIFO node-id arrays, and constraint arrays.  Subsequent incremental
+    calls are fully vectorized (this is the engine-side analogue of
+    LightningSimV2's compiled-graph reuse)."""
+    if getattr(engine, "_incr_cache", None) is not None:
+        return engine._incr_cache
+    nodes = engine.graph.nodes
+    n = len(nodes)
+    NEGI = np.int64(-(1 << 60))
+    # chain decomposition: per-module node sequences (SEQ edges), plus
+    # cross-module RAW edges; WAR edges are depth-dependent and regenerated.
+    dsts, srcs, wgts = [], [], []
+    base_c = np.full(n, NEGI, dtype=np.int64)
+    seq_w = np.zeros(n, dtype=np.int64)
+    chains_map = {}
+    for node in nodes:
+        chains_map.setdefault(node.module, []).append(node.idx)
+        if not node.preds:
+            base_c[node.idx] = node.time
+        for (s, w) in node.preds:
+            kind = engine._edge_kinds.get((node.idx, s), SEQ)
+            if kind == WAR:
+                continue
+            if kind == SEQ:
+                seq_w[node.idx] = w
+                continue
+            dsts.append(node.idx)       # RAW cross edge
+            srcs.append(s)
+            wgts.append(w)
+    chains = [np.asarray(v, np.int64) for v in chains_map.values()]
+    # NB-committed writes never stall: regenerated WAR edges must attach
+    # only to blocking writes (NB depth-dependence is a CONSTRAINT).
+    nb_write_nodes = {
+        c.source_node for c in engine.constraints
+        if c.rtype in (RequestType.FIFO_NB_WRITE, RequestType.FIFO_CAN_WRITE)
+        and c.outcome}
+    fifo_np = []
+    for tbl in engine.fifos:
+        w_nodes = np.asarray(tbl.writes, np.int64)
+        blocking = np.asarray([w not in nb_write_nodes for w in tbl.writes],
+                              bool)
+        fifo_np.append((w_nodes, np.asarray(tbl.reads, np.int64), blocking))
+    # constraint arrays: kind 0 = can-read (target = seq-th write),
+    # kind 1 = can-write (target depends on depth)
+    c_kind, c_fifo, c_seq, c_src, c_out = [], [], [], [], []
+    for c in engine.constraints:
+        is_read = c.rtype in (RequestType.FIFO_NB_READ,
+                              RequestType.FIFO_CAN_READ)
+        c_kind.append(0 if is_read else 1)
+        c_fifo.append(c.fifo)
+        c_seq.append(c.source_seq)
+        c_src.append(c.source_node)
+        c_out.append(c.outcome)
+    engine._incr_cache = {
+        "n": n,
+        "dst": np.asarray(dsts, np.int64),
+        "src": np.asarray(srcs, np.int64),
+        "wgt": np.asarray(wgts, np.int64),
+        "base": base_c,
+        "chains": chains,
+        "seq_w": seq_w,
+        "fifos": fifo_np,
+        "c_kind": np.asarray(c_kind, np.int64),
+        "c_fifo": np.asarray(c_fifo, np.int64),
+        "c_seq": np.asarray(c_seq, np.int64),
+        "c_src": np.asarray(c_src, np.int64),
+        "c_out": np.asarray(c_out, bool),
+    }
+    return engine._incr_cache
+
+
+def _cross_edges(engine: OmniSim, depths: Sequence[int]):
+    """RAW cross edges (cached) + WAR edges regenerated for ``depths`` —
+    fully vectorized."""
+    cache = _cache_base_arrays(engine)
+    dst_parts = [cache["dst"]]
+    src_parts = [cache["src"]]
+    wgt_parts = [cache["wgt"]]
+    for tbl, (w_nodes, r_nodes, blocking) in zip(engine.fifos,
+                                                 cache["fifos"]):
+        S = depths[tbl.fid]
+        nw = len(w_nodes)
+        if nw <= S:
+            continue
+        w_seq = np.arange(S + 1, nw + 1, dtype=np.int64)      # writes > S
+        tgt = w_seq - S - 1
+        blk = blocking[S:]
+        # a BLOCKING write whose target read never happened can never
+        # commit (deadlock); an NB write in that situation simply fails —
+        # which its constraint re-evaluation reports as a flip.
+        if np.any(blk & (tgt >= len(r_nodes))):
+            bad = int(w_seq[blk & (tgt >= len(r_nodes))][0])
+            return None, None, None, (
+                f"write #{bad} on '{tbl.name}' can never commit with "
+                f"depth {S} (would deadlock)")
+        sel = blk & (tgt < len(r_nodes))
+        dst_parts.append(w_nodes[S:][sel])
+        src_parts.append(r_nodes[tgt[sel]])
+        wgt_parts.append(np.ones(int(sel.sum()), np.int64))
+    return (np.concatenate(dst_parts), np.concatenate(src_parts),
+            np.concatenate(wgt_parts), None)
+
+
+def resimulate(result: SimResult, new_depths: Sequence[int],
+               fallback: bool = True) -> IncrementalOutcome:
+    """Attempt incremental re-simulation of an OmniSim result.
+
+    With ``fallback=True`` a constraint violation triggers a full re-sim
+    (reusing the compiled program — the paper's Table 6 second row).
+    """
+    t0 = _time.perf_counter()
+    engine: OmniSim = result.graph
+    assert isinstance(engine, OmniSim), "incremental re-sim needs an OmniSim result"
+    new_depths = tuple(int(d) for d in new_depths)
+
+    cache = _cache_base_arrays(engine)
+    cross_dst, cross_src, cross_w, err = _cross_edges(engine, new_depths)
+    if err is None:
+        try:
+            times = longest_path_chains(cache["chains"], cache["seq_w"],
+                                        cache["base"], cross_dst, cross_src,
+                                        cross_w)
+        except ValueError:           # WAR edges formed a cycle
+            err = "regenerated WAR edges create a cycle (event order invalid)"
+    if err is None:
+        # re-evaluate constraints (paper Sec. 7.2) — vectorized
+        violated = 0
+        if len(cache["c_kind"]):
+            new_ok = np.zeros(len(cache["c_kind"]), bool)
+            src_t = times[cache["c_src"]]
+            for fid, (w_nodes, r_nodes, _blk) in enumerate(cache["fifos"]):
+                S = new_depths[fid]
+                sel = cache["c_fifo"] == fid
+                if not sel.any():
+                    continue
+                seq = cache["c_seq"][sel]
+                kind = cache["c_kind"][sel]
+                st = src_t[sel]
+                ok = np.zeros(len(seq), bool)
+                # reads: target = seq-th write
+                rd = kind == 0
+                tgt = np.minimum(seq[rd] - 1, max(len(w_nodes) - 1, 0))
+                exists = (seq[rd] - 1) < len(w_nodes)
+                t_tgt = times[w_nodes[tgt]] if len(w_nodes) else \
+                    np.zeros(len(tgt), np.int64)
+                ok[rd] = exists & (t_tgt < st[rd])
+                # writes: trivially true if seq <= S, else target read
+                wr = kind == 1
+                seq_w = seq[wr]
+                triv = seq_w <= S
+                tgt_w = np.clip(seq_w - S - 1, 0, max(len(r_nodes) - 1, 0))
+                exists_w = (seq_w - S - 1) < len(r_nodes)
+                t_tgt_w = times[r_nodes[tgt_w]] if len(r_nodes) else \
+                    np.zeros(len(tgt_w), np.int64)
+                ok[wr] = triv | (exists_w & (t_tgt_w < st[wr]))
+                new_ok[sel] = ok
+            violated = int((new_ok != cache["c_out"]).sum())
+        if violated == 0:
+            cycles = int(times.max()) if len(times) else 0
+            elapsed = _time.perf_counter() - t0
+            new_res = SimResult(program=result.program,
+                                outputs=dict(result.outputs), cycles=cycles,
+                                engine="omnisim-incr", stats=result.stats,
+                                graph=engine, constraints=result.constraints,
+                                depths=new_depths)
+            return IncrementalOutcome(True, "constraints satisfied", elapsed,
+                                      new_res)
+        err = f"{violated} constraint(s) violated — control/data flow diverges"
+    elapsed = _time.perf_counter() - t0
+    if not fallback:
+        return IncrementalOutcome(False, err, elapsed, None)
+    full = simulate(engine.program, depths=new_depths)
+    elapsed = _time.perf_counter() - t0
+    out = IncrementalOutcome(False, err, elapsed, full)
+    return out

@@ -1,0 +1,7 @@
+"""Benchmark design registry: the paper's Type B/C designs + Type A suite."""
+from .paper import PAPER_DESIGNS
+from .typea import TYPEA_DESIGNS
+
+ALL_DESIGNS = {**PAPER_DESIGNS, **TYPEA_DESIGNS}
+
+__all__ = ["PAPER_DESIGNS", "TYPEA_DESIGNS", "ALL_DESIGNS"]

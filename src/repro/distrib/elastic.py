@@ -1,0 +1,75 @@
+"""Elastic scaling + straggler mitigation.
+
+**Elastic re-mesh**: on boot (and after any restart), the runtime builds the
+largest mesh the *surviving* device set supports, preferring to shrink the
+'data' axis (pure DP capacity) before touching 'model' (which would change
+weight-shard layouts).  Checkpoints are layout-agnostic (full arrays +
+specs), so restoring onto the new mesh is a plain sharded load.
+
+**Straggler mitigation**: with synchronous data parallelism a straggling pod
+slows every step.  The runtime tracks an EWMA of per-step wall time; when a
+host exceeds ``straggler_factor`` x the fleet median for ``patience``
+consecutive steps it is reported for eviction, after which the elastic
+re-mesh path kicks in — shrink 'data', rebalance the global batch over the
+remaining DP shards (the data pipeline reshards by host_id/num_hosts), and
+continue from the in-memory params (no checkpoint rollback needed because
+all survivors hold identical replicas along 'data').
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def best_mesh_shape(n_devices: int, model_parallel: int = 16,
+                    pod_size: int = 256) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Largest usable (pod, data, model) shape for a surviving device count.
+
+    'model' is pinned (changing it re-lays-out every weight shard); 'data'
+    shrinks to the largest multiple that fits; full pods are preferred.
+    """
+    assert n_devices >= model_parallel, "fewer devices than model shards"
+    pods = n_devices // pod_size
+    if pods >= 2:
+        data = pod_size // model_parallel
+        return (pods, data, model_parallel), ("pod", "data", "model")
+    data = n_devices // model_parallel
+    return (data, model_parallel), ("data", "model")
+
+
+def make_elastic_mesh(n_devices: Optional[int] = None,
+                      model_parallel: int = 16):
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    shape, axes = best_mesh_shape(n, model_parallel)
+    used = int(np.prod(shape))
+    return jax.make_mesh(shape, axes, devices=devs[:used])
+
+
+@dataclass
+class StragglerMonitor:
+    straggler_factor: float = 1.5
+    patience: int = 5
+    ewma: Dict[int, float] = field(default_factory=dict)
+    strikes: Dict[int, int] = field(default_factory=dict)
+
+    def record(self, host_id: int, step_time_s: float) -> None:
+        prev = self.ewma.get(host_id, step_time_s)
+        self.ewma[host_id] = 0.8 * prev + 0.2 * step_time_s
+
+    def stragglers(self) -> List[int]:
+        if len(self.ewma) < 2:
+            return []
+        median = float(np.median(list(self.ewma.values())))
+        out = []
+        for h, t in self.ewma.items():
+            if t > self.straggler_factor * median:
+                self.strikes[h] = self.strikes.get(h, 0) + 1
+                if self.strikes[h] >= self.patience:
+                    out.append(h)
+            else:
+                self.strikes[h] = 0
+        return out

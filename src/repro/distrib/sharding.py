@@ -1,0 +1,255 @@
+"""Sharding rules: parameter and activation PartitionSpecs.
+
+Path-based rules map every parameter leaf to a PartitionSpec over the
+production mesh axes ('pod', 'data', 'model').  Leading stacked-layer axes
+([L, ...] or [G, M, ...]) are padded with None automatically, so the same
+rules serve scanned and unscanned layouts.
+
+Policy (baseline — the §Perf hillclimb iterates on this):
+  * tensor-parallel over 'model': attention heads / FFN hidden / vocab
+  * experts sharded over 'model' (expert parallelism for MoE weights)
+  * data-parallel batch over ('pod', 'data') — params replicated across pods
+  * optimizer state mirrors param specs (ZeRO-style sharded moments)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _base_spec(path: Tuple[str, ...], ndim: int) -> P:
+    """Spec for the *unstacked* parameter at this path.
+
+    Every large matrix is 2D-sharded: the tensor-parallel dim over 'model'
+    and the other dim over 'data' (FSDP / ZeRO-3 — XLA all-gathers weight
+    shards per scan step and reduce-scatters their grads).  Optimizer
+    moments inherit the same specs, so state memory scales with the full
+    chip count, not just the TP degree.
+    """
+    name = path[-1]
+    in_moe = "moe" in path
+    in_ssm = "ssm" in path or "mlstm" in path
+    if name == "embed":
+        return P("model", "data")
+    if name == "lm_head":
+        return P("data", "model")
+    if name in ("wq", "wk", "wv"):
+        return P("data", "model")
+    if name == "wo":
+        return P("model", "data")
+    if name in ("bq", "bk", "bv"):
+        return P("model")
+    if in_moe and name in ("w_gate", "w_up"):
+        return P("model", "data", None)        # experts over 'model', FSDP d
+    if in_moe and name == "w_down":
+        return P("model", None, "data")
+    if in_moe and name == "router":
+        return P("data", None)
+    if name in ("w_gate", "w_up"):
+        return P("data", "model")
+    if name == "w_down":
+        return P("model", "data")
+    if in_ssm and name == "w_in":
+        return P("data", "model")
+    if in_ssm and name == "conv_w":
+        return P(None, "model")
+    if in_ssm and name == "w_bc":
+        return P("model", "data")
+    if in_ssm and name == "w_dt":
+        return P("model", None)          # H may be < 16
+    if in_ssm and name in ("w_q", "w_k"):
+        return P("model", "data")
+    if in_ssm and name == "d_skip":
+        return P("model")
+    if in_ssm and name == "w_out":
+        return P("model", "data")
+    if name == "w_if":
+        return P("model", None)          # 2H may be < 16
+    if name in ("w_gates",):                   # sLSTM input gates
+        return P("data", "model")
+    if name in ("r_gates",):
+        return P(None, None, "model")
+    if name == "w_out":
+        return P("model", "data")
+    return P()                                  # norms, biases: replicated
+
+
+def param_spec(path: Tuple[str, ...], ndim: int) -> P:
+    spec = _base_spec(path, ndim)
+    pad = ndim - len(spec)
+    if pad > 0:
+        spec = P(*([None] * pad), *spec)
+    elif pad < 0:
+        # parameter is lower-rank than the rule (e.g. smoke configs): strip
+        spec = P(*list(spec)[-ndim:]) if ndim else P()
+    return spec
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "name"):
+            names.append(str(e.name))
+        else:
+            names.append(str(e))
+    return tuple(names)
+
+
+FSDP_MIN_ELEMS = 4_000_000     # below this, replicating over 'data' is
+                               # cheaper than per-layer weight all-gathers
+
+
+def param_specs(params, fsdp_min_elems: int = FSDP_MIN_ELEMS) -> Any:
+    """Pytree of PartitionSpecs matching ``params`` (works on shape structs).
+
+    Size-adaptive FSDP (§Perf iteration B): small parameters drop the
+    'data' axis — the all-gather traffic costs more than the memory saved.
+    """
+    def one(path, leaf):
+        ndim = leaf.ndim if hasattr(leaf, "ndim") else np.ndim(leaf)
+        spec = param_spec(_path_names(path), ndim)
+        if _TP_DEGREE == 1:
+            spec = _strip_model(spec)
+        size = int(np.prod(leaf.shape)) if hasattr(leaf, "shape") else 0
+        if size and size < fsdp_min_elems and "data" in spec:
+            spec = P(*[None if a == "data" else a for a in spec])
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+_TP_DEGREE = 16
+
+
+def set_tp_degree(d: int) -> None:
+    """Per-arch parallelism policy: tp=1 folds the mesh 'model' axis into
+    the data-parallel axes and strips 'model' from every param spec."""
+    global _TP_DEGREE
+    _TP_DEGREE = d
+
+
+def tp_degree() -> int:
+    return _TP_DEGREE
+
+
+def _strip_model(spec: P) -> P:
+    return P(*[None if a == "model" else a for a in spec])
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    if _TP_DEGREE == 1 and "model" in mesh.axis_names:
+        axes.append("model")
+    return tuple(axes)
+
+
+def batch_spec(mesh: Mesh, ndim: int, shard_batch: bool = True,
+               batch_size: int = 0) -> P:
+    """Tokens/targets [B, S] or frontend [B, F, D]: batch over DP axes.
+
+    Greedy: use the longest DP-axis prefix whose product divides the batch
+    (pure-DP folds 'model' into DP, which can exceed small serving batches).
+    """
+    dp = dp_axes(mesh)
+    if batch_size:
+        chosen = []
+        prod = 1
+        for a in dp:
+            n = mesh.shape[a]
+            if batch_size % (prod * n) == 0:
+                chosen.append(a)
+                prod *= n
+        dp = tuple(chosen)
+    lead = dp if shard_batch and dp else None
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def cache_spec(mesh: Mesh, path: Tuple[str, ...], ndim: int,
+               batch_one: bool = False) -> P:
+    """Decode-cache leaves.
+
+    KV caches [L, B, T, Hkv, hd]: batch over DP axes; for batch=1 long-context
+    cells the *sequence* axis is sharded over 'data' instead.  SSM/xLSTM
+    state tensors shard over batch when possible, else replicate.
+    """
+    name = path[-1]
+    dp = dp_axes(mesh)
+    if _TP_DEGREE == 1:
+        if name in ("k", "v") and ndim == 5:
+            if batch_one:
+                return P(None, None, "data", None, None)
+            return P(None, dp, None, None, None)
+    if name in ("k", "v") and ndim == 5:
+        # [L, B, T, Hkv, hd]: batch over DP; head_dim over 'model' (hd is
+        # always a multiple of 16, unlike Hkv) — splits KV-read bandwidth.
+        if batch_one:
+            return P(None, None, "data", None, "model")
+        return P(None, dp, None, None, "model")
+    if name in ("k_scale", "v_scale") and ndim == 4:
+        if batch_one:
+            return P(None, None, "data", None)
+        return P(None, dp, None, None)
+    if name == "enc" and ndim == 3:
+        return P(dp if not batch_one else None, None, None)
+    if name == "pos":
+        return P()
+    # recurrent-state tensors: batch axis follows the stacked-layer axes —
+    # [L, B, ...] for lm/hybrid caches, [G, M, B, ...] for mLSTM, [G, B, ...]
+    # for sLSTM.
+    if not batch_one and ndim >= 3:
+        if "mlstm" in path:
+            b_axis = 2
+        else:                      # hybrid ssm cache / slstm: one stack axis
+            b_axis = 1
+        spec = [None] * ndim
+        spec[b_axis] = dp
+        return P(*spec)
+    return P(*([None] * ndim))
+
+
+def shardings_for(mesh: Mesh, specs) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+# -------------------------------------------------------------- active mesh
+# Launchers (train/serve/dryrun) register the mesh here so model code can
+# place activation sharding constraints; smoke tests leave it unset and all
+# constraints become no-ops.
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+def set_active_mesh(mesh: Optional[Mesh]) -> None:
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+def constrain(x, *axes):
+    """Sharding-constrain ``x`` if a mesh is active.
+
+    ``axes`` entries: "dp" expands to the active DP axes; "model" as-is;
+    None for unsharded dims.
+    """
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    spec = []
+    for a in axes:
+        if a == "dp":
+            dp = dp_axes(mesh)
+            spec.append(dp if dp else None)
+        elif a == "model" and _TP_DEGREE == 1:
+            spec.append(None)        # pure DP: 'model' already inside dp
+        else:
+            spec.append(a)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: causal GQA flash attention (online softmax).
+
+The train-step hot spot.  Blocking is VMEM-native:
+
+  * grid = (BH, num_q_blocks, num_k_blocks): one (q-block, k-block) tile
+    pair per step; k is the innermost (sequential) axis so the running
+    max / denominator / accumulator scratch carries across k steps;
+  * q tiles [BLK_Q, hd], k/v tiles [BLK_K, hd] — hd is a lane multiple
+    (64/128/256), BLK_Q/BLK_K default 128/256 (8-sublane aligned);
+  * causal + sliding-window masking by block-level iota comparison; fully
+    masked k-blocks still execute (grid is static) but their contribution
+    is exp(-inf)=0 — the ops.py wrapper shrinks the k range per q block
+    instead where it can (causal upper bound).
+  * GQA: query head h reads kv head h // group_size via the BlockSpec
+    index map — no KV duplication in VMEM.
+
+Numerics follow the standard flash recurrence in f32 scratch regardless of
+input dtype; optional score softcap (gemma2) is applied pre-masking.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLK_Q = 128
+DEFAULT_BLK_K = 128
+NEG_INF = float("-inf")
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, blk_q: int, blk_k: int, num_k_blocks: int,
+               causal: bool, window: int, softcap: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # [blk_q, hd]
+    k = k_ref[0].astype(jnp.float32)                  # [blk_k, hd]
+    v = v_ref[0].astype(jnp.float32)                  # [blk_k, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [blk_q, blk_k]
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (blk_q, blk_k), 0)
+    k_pos = kj * blk_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (blk_q, blk_k), 1)
+    mask = jnp.ones((blk_q, blk_k), jnp.bool_)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window > 0:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                               # [blk_q, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows (m_new = -inf): exp(-inf - -inf) -> use 0
+    safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
+    p = jnp.where(mask, jnp.exp(s - safe_m), 0.0)     # [blk_q, blk_k]
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kj == num_k_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
+                         softcap: float = 0.0, group_size: int = 1,
+                         blk_q: int = DEFAULT_BLK_Q,
+                         blk_k: int = DEFAULT_BLK_K,
+                         interpret: bool = False):
+    """q: [BH, S, hd]; k, v: [BHkv, S, hd] with BH = BHkv * group_size.
+
+    Head-major layout: row bh of q maps to row bh // group_size of k/v.
+    Returns [BH, S, hd].
+    """
+    BH, S, hd = q.shape
+    assert S % blk_q == 0 and S % blk_k == 0, (S, blk_q, blk_k)
+    nq = S // blk_q
+    nk = S // blk_k
+    grid = (BH, nq, nk)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=1.0 / math.sqrt(hd), blk_q=blk_q, blk_k=blk_k,
+        num_k_blocks=nk, causal=causal, window=window, softcap=softcap)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, blk_k, hd),
+                         lambda b, i, j, g=group_size: (b // g, j, 0)),
+            pl.BlockSpec((1, blk_k, hd),
+                         lambda b, i, j, g=group_size: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            # f32 VMEM scratch: running max, denominator, output accumulator
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

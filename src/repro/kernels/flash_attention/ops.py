@@ -1,0 +1,31 @@
+"""Jitted wrapper for the flash-attention kernel (model-facing API)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLK_K, DEFAULT_BLK_Q, flash_attention_bhsd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "interpret", "blk_q", "blk_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, interpret: bool = True,
+                    blk_q: int = DEFAULT_BLK_Q, blk_k: int = DEFAULT_BLK_K):
+    """q: [B, S, H, hd]; k, v: [B, S, Hkv, hd] -> [B, S, H, hd].
+
+    interpret=True is the CPU-validation mode; pass False on real TPUs.
+    """
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qb = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kb = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, hd)
+    vb = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, hd)
+    out = flash_attention_bhsd(qb, kb, vb, causal=causal, window=window,
+                               softcap=softcap, group_size=G,
+                               blk_q=min(blk_q, S), blk_k=min(blk_k, S),
+                               interpret=interpret)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: chunked mLSTM / SSD recurrence.
+
+One grid step processes one (batch*head, chunk) tile entirely in VMEM:
+
+    y[t] = sum_{s<=t} exp(cum[t]-cum[s]) * ig[s] * (q[t].k[s]) * v[s]
+           + exp(cum[t]) * q[t] @ state_carry
+
+The [c, c] decay-masked score tile is MXU-shaped; the matrix state carry
+[P, Pv] lives in VMEM scratch and persists across the chunk axis of the grid
+(TPU grids iterate sequentially — the chunk axis is declared "arbitrary").
+This is the same chunk dataflow as models/ssm.ssd_scan / models/xlstm, i.e.
+the TPU-native replacement for the CUDA selective-scan kernel (DESIGN.md
+hardware-adaptation notes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, ig_ref, la_ref, o_ref, state_scr, *,
+                  chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    q = q_ref[0].astype(jnp.float32)            # [c, P]
+    k = k_ref[0].astype(jnp.float32)            # [c, P]
+    v = v_ref[0].astype(jnp.float32)            # [c, Pv]
+    ig = ig_ref[0].astype(jnp.float32)          # [1, c]
+    la = la_ref[0].astype(jnp.float32)          # [1, c]
+
+    cum = jnp.cumsum(la, axis=1)                # [1, c]
+    # decay-masked scores: L[t, s] = exp(cum[t] - cum[s]) for s <= t
+    diff = cum[0][:, None] - cum[0][None, :]    # [c, c]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(s_idx <= t_idx, jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [c, c]
+    scores = scores * L
+    iv = ig[0][:, None] * v                     # [c, Pv]
+    y_local = jax.lax.dot_general(scores, iv, (((1,), (0,)), ((), ())))
+
+    # carry contribution: exp(cum[t]) * q[t] @ state
+    carry = jax.lax.dot_general(q, state_scr[...],
+                                (((1,), (0,)), ((), ())))        # [c, Pv]
+    y = y_local + jnp.exp(cum[0])[:, None] * carry
+    o_ref[0] = y.astype(o_ref.dtype)
+
+    # state update: state' = exp(cum[-1]) * state
+    #               + sum_s exp(cum[-1]-cum[s]) k[s] (ig[s] v[s])^T
+    # (iv already carries the input gate — do not re-apply it to k)
+    decay_to_end = jnp.exp(cum[0][-1] - cum[0])                  # [c]
+    kw = k * decay_to_end[:, None]                               # [c, P]
+    state_scr[...] = state_scr[...] * jnp.exp(cum[0][-1]) \
+        + jax.lax.dot_general(kw, iv, (((0,), (0,)), ((), ())))  # [P, Pv]
+
+
+def mlstm_chunk_bhsd(q, k, v, ig, la, *, chunk: int = 128,
+                     interpret: bool = False):
+    """q, k: [BH, S, P]; v: [BH, S, Pv]; ig, la: [BH, S].  Returns
+    [BH, S, Pv].  The chunk axis is sequential per BH row (state carry)."""
+    BH, S, P = q.shape
+    Pv = v.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nC = S // chunk
+    grid = (BH, nC)
+    ig2 = ig.reshape(BH, 1, S)
+    la2 = la.reshape(BH, 1, S)
+
+    kernel = functools.partial(_mlstm_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, Pv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, c: (b, 0, c)),
+            pl.BlockSpec((1, 1, chunk), lambda b, c: (b, 0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, Pv), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, Pv), q.dtype),
+        scratch_shapes=[pltpu.VMEM((P, Pv), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, ig2, la2)

@@ -1,0 +1,27 @@
+"""Jitted wrapper for the chunked mLSTM kernel (model-facing API)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import mlstm_chunk_bhsd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunk(q, k, v, ig, la, *, chunk: int = 128, interpret: bool = True):
+    """q, k: [B, S, H, P]; v: [B, S, H, Pv]; ig, la: [B, S, H].
+
+    Returns [B, S, H, Pv].  interpret=True is the CPU-validation mode.
+    """
+    B, S, H, P = q.shape
+    Pv = v.shape[-1]
+    qb = q.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    kb = k.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    vb = v.transpose(0, 2, 1, 3).reshape(B * H, S, Pv)
+    igb = ig.transpose(0, 2, 1).reshape(B * H, S)
+    lab = la.transpose(0, 2, 1).reshape(B * H, S)
+    out = mlstm_chunk_bhsd(qb, kb, vb, igb, lab, chunk=min(chunk, S),
+                           interpret=interpret)
+    return out.reshape(B, H, S, Pv).transpose(0, 2, 1, 3)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the chunked mLSTM kernel: direct O(S^2) recurrence."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mlstm_ref(q, k, v, ig, la):
+    """q, k: [BH, S, P]; v: [BH, S, Pv]; ig, la: [BH, S].
+
+    y[t] = sum_{s<=t} exp(cum[t] - cum[s]) ig[s] (q[t].k[s]) v[s]
+    """
+    BH, S, P = q.shape
+    cum = jnp.cumsum(la, axis=1)                                # [BH, S]
+    diff = cum[:, :, None] - cum[:, None, :]                    # [BH, S, S]
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    L = jnp.where(causal[None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("btp,bsp->bts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * L
+    iv = ig[..., None] * v.astype(jnp.float32)
+    return jnp.einsum("bts,bsp->btp", scores, iv).astype(q.dtype)

@@ -1,0 +1,238 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Per (arch x shape x mesh) cell we derive the three terms (seconds/step):
+
+    compute    = HLO_FLOPs / (chips x 197e12 bf16 FLOP/s)
+    memory     = HLO_bytes / (chips x 819e9 B/s HBM)
+    collective = collective_bytes / (chips x 50e9 B/s ICI per link)
+
+**Scan-body caveat** (measured, see EXPERIMENTS.md §Dry-run): XLA's
+HloCostAnalysis counts a while-loop body ONCE, so a depth-L scanned model
+under-reports by ~L.  We therefore lower each cell at two shallow depths
+(L1 < L2, same shapes otherwise), take the per-layer delta, and extrapolate:
+
+    total(L) = cost(L1) + (L - L1) / (L2 - L1) * (cost(L2) - cost(L1))
+
+The same extrapolation applies to per-device collective bytes parsed from
+the partitioned HLO.  Residual inner time-scans (sLSTM steps, SSD chunk
+carries) are small and noted per-arch.  MODEL_FLOPS uses the 6·N·D
+convention (6·N_active·D for MoE) plus exact attention terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+
+from ..configs.base import ArchConfig, ShapeCell
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*%?\S*\s*=\s*\(?([a-z0-9]+)\[([\d,]*)\]"          # result type
+    r".*?\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)", re.M)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum per-device payload bytes of every collective op in the HLO.
+
+    Sizes in the partitioned module are already per-partition.  We count the
+    result buffer of each collective (a good proxy for link payload; for
+    all-reduce the payload equals the buffer size per ring pass).
+    """
+    out: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dt, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out[kind] = out.get(kind, 0.0) + n * _DTYPE_BYTES[dt]
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclass
+class CellCost:
+    """Raw per-device costs of one compiled executable."""
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, float]
+    temp_bytes: float = 0.0
+    arg_bytes: float = 0.0
+
+
+def cost_of(compiled) -> CellCost:
+    ca = compiled.cost_analysis()
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    ma = compiled.memory_analysis()
+    return CellCost(
+        flops=float(ca.get("flops", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes=coll["total"],
+        coll_breakdown=coll,
+        temp_bytes=float(ma.temp_size_in_bytes),
+        arg_bytes=float(ma.argument_size_in_bytes),
+    )
+
+
+def extrapolate(c1: CellCost, c2: CellCost, L1: int, L2: int,
+                L) -> CellCost:
+    """Linear depth extrapolation (scan bodies counted once — see module
+    docstring).  Per-layer deltas are clamped >= 0: XLA occasionally
+    optimizes the deeper shallow variant harder, and a negative per-layer
+    cost is physically meaningless."""
+    def ex(a, b):
+        return a + (L - L1) / (L2 - L1) * max(b - a, 0.0)
+
+    return CellCost(
+        flops=ex(c1.flops, c2.flops),
+        bytes_accessed=ex(c1.bytes_accessed, c2.bytes_accessed),
+        coll_bytes=ex(c1.coll_bytes, c2.coll_bytes),
+        coll_breakdown={k: ex(c1.coll_breakdown.get(k, 0.0),
+                              c2.coll_breakdown.get(k, 0.0))
+                        for k in set(c1.coll_breakdown) | set(c2.coll_breakdown)},
+    )
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops: float            # cluster-wide (per-device x chips)
+    useful_ratio: float         # MODEL_FLOPS / HLO_FLOPS
+    roofline_fraction: float    # max-term share vs sum (intensity proxy)
+
+    def row(self):
+        return (f"{self.compute_s*1e3:9.2f} {self.memory_s*1e3:9.2f} "
+                f"{self.collective_s*1e3:9.2f}  {self.dominant:10s} "
+                f"{self.useful_ratio:6.2f}")
+
+
+def roofline_terms(cost: CellCost, chips: int, model_flops: float) -> Roofline:
+    compute = cost.flops / PEAK_FLOPS          # per-device flops / per-chip peak
+    memory = cost.bytes_accessed / HBM_BW
+    coll = cost.coll_bytes / ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    hlo_cluster = cost.flops * chips
+    useful = model_flops / hlo_cluster if hlo_cluster else 0.0
+    total = compute + memory + coll
+    frac = terms[dominant] / total if total else 0.0
+    return Roofline(compute, memory, coll, dominant, model_flops,
+                    hlo_cluster, useful, frac)
+
+
+def chunk_scan_corrections(cfg: ArchConfig, cell: ShapeCell,
+                           chips: int) -> Dict[str, float]:
+    """Analytic per-device corrections for inner chunk scans whose bodies
+    HLO cost analysis counts once (attention query-block scan, fused-CE
+    chunk scan).  Each correction adds the missing (nQ - 1)/nQ share of the
+    scan's analytic FLOPs/bytes."""
+    from ..models.attention import QCHUNK
+    from ..models.lm import CE_CHUNK
+    from ..models.common import padded_vocab
+    S, B = cell.seq_len, cell.global_batch
+    out = {"flops": 0.0, "bytes": 0.0}
+    if cell.kind == "decode":
+        return out                      # decode has no inner chunk scans
+    hd = cfg.resolved_head_dim
+    train = cell.kind == "train"
+    fb = 3.0 if train else 1.0          # fwd+bwd multiplier
+    remat = 2.0 if (train and cfg.remat) else 1.0   # chunk body checkpointed
+    # attention scores+probs: 4 * H * hd * S^2/2 per example per layer (fwd)
+    if S > QCHUNK and S % QCHUNK == 0 and cfg.family != "ssm":
+        nq = S // QCHUNK
+        layers = cfg.num_layers + (cfg.encoder_layers if cfg.family == "audio" else 0)
+        attn = 4.0 * layers * cfg.num_heads * hd * (S * S / 2) * B
+        attn = attn * (fb if not train else (fb + (remat - 1)))
+        out["flops"] += attn / chips * (1 - 1.0 / nq)
+        # score traffic (bf16 write+read) — an HBM upper bound
+        out["bytes"] += (2 * 2 * layers * cfg.num_heads * (S * S / 2) * B
+                         / chips * (1 - 1.0 / nq))
+    # fused-CE chunk scan (train only)
+    if train and S > CE_CHUNK and S % CE_CHUNK == 0:
+        nce = S // CE_CHUNK
+        Vp = padded_vocab(cfg.vocab_size)
+        ce = 2.0 * B * S * cfg.d_model * Vp * (fb + (remat - 1))
+        out["flops"] += ce / chips * (1 - 1.0 / nce)
+        out["bytes"] += 2 * B * S * Vp * 4 / chips * (1 - 1.0 / nce)
+    return out
+
+
+# ------------------------------------------------------------- model FLOPs
+def param_count(cfg: ArchConfig, active_only: bool = False) -> float:
+    """Analytic parameter count (embedding excluded from the 6ND count)."""
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    attn = d * cfg.num_heads * hd * 2 + d * cfg.num_kv_heads * hd * 2
+    if cfg.family == "moe":
+        mo = cfg.moe
+        e = mo.top_k if active_only else mo.num_experts
+        ffn = 3 * d * mo.d_expert * e
+        block = attn + ffn
+        n = block * cfg.num_layers
+    elif cfg.family == "ssm":
+        xc = cfg.xlstm
+        di = xc.mlstm_expand * d
+        mlstm = d * 2 * di + 2 * di * di + di * 2 * cfg.num_heads + di * d
+        slstm = 4 * d * d + d * d
+        G = cfg.num_layers // xc.slstm_every
+        M = xc.slstm_every - 1
+        n = G * (M * mlstm + slstm)
+    else:
+        ffn = 3 * d * cfg.d_ff
+        block = attn + ffn
+        if cfg.family == "hybrid":
+            ssm = cfg.ssm
+            di = ssm.expand * d
+            block += d * 2 * di + di * (2 * ssm.state_dim) + di * d
+        n = block * cfg.num_layers
+        if cfg.family == "audio":
+            # encoder layers + decoder cross-attention
+            n += cfg.encoder_layers * (attn + ffn) + cfg.num_layers * attn
+    return float(n)
+
+
+def model_flops(cfg: ArchConfig, cell: ShapeCell) -> float:
+    """6·N·D (train) / 2·N·D (inference) + exact attention-score terms."""
+    N = param_count(cfg, active_only=True)
+    S = cell.seq_len
+    B = cell.global_batch
+    hd = cfg.resolved_head_dim
+    if cell.kind == "train":
+        tokens = B * S
+        base = 6.0 * N * tokens
+        attn_sc = 12.0 * cfg.num_layers * cfg.num_heads * hd * S * S / 2 * B
+        return base + attn_sc
+    if cell.kind == "prefill":
+        tokens = B * S
+        base = 2.0 * N * tokens
+        attn_sc = 4.0 * cfg.num_layers * cfg.num_heads * hd * S * S / 2 * B
+        return base + attn_sc
+    # decode: one token, attention over the cache
+    base = 2.0 * N * B
+    attn_sc = 4.0 * cfg.num_layers * cfg.num_heads * hd * S * B
+    if cfg.family == "ssm":
+        attn_sc = 0.0
+    return base + attn_sc

@@ -1,0 +1,56 @@
+"""Serving launcher: batched prefill + decode with a paged-ish KV cache.
+
+``python -m repro.launch.serve --arch smollm-135m --smoke`` runs a small
+batched-generation demo on the host: requests arrive in a queue, are
+prefilled in batches, then decode in lockstep with per-slot stopping.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_arch
+from ..distrib.sharding import set_active_mesh
+from ..models import api
+from ..serve.engine import ServeEngine
+from .mesh import make_host_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=24)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    mesh = make_host_mesh()
+    set_active_mesh(None)        # host demo: no sharding constraints
+
+    key = jax.random.PRNGKey(args.seed)
+    params = api.init_params(key, cfg)
+    engine = ServeEngine(cfg, params, batch=args.batch, max_len=args.max_len)
+
+    prompts = np.random.default_rng(args.seed).integers(
+        0, cfg.vocab_size, size=(args.batch, args.prompt_len))
+    t0 = time.time()
+    out = engine.generate(prompts, gen_len=args.gen_len)
+    dt = time.time() - t0
+    toks = args.batch * args.gen_len
+    print(f"generated {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s batch={args.batch})")
+    print("sample continuation token ids:", out[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

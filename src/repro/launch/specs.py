@@ -1,0 +1,112 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs`` returns (args, in_shardings, fn) for the cell's entry point:
+train_4k lowers ``train_step``; prefill_32k lowers ``prefill_step``;
+decode_32k / long_500k lower ``decode_step`` (one new token against a full
+KV/state cache of the cell's seq_len) — never train_step, per the spec.
+
+No device memory is allocated: params/opt/cache structs come from
+``jax.eval_shape`` over the real init functions, so the dry-run exercises
+exactly the shapes the real system would.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeCell
+from ..distrib.sharding import (batch_spec, cache_spec, dp_axes, param_specs,
+                                set_tp_degree, _path_names)
+from ..models import api
+from ..optim.adamw import init_adamw
+from ..train.step import make_decode_step, make_prefill_step, make_train_step
+
+
+def params_struct(cfg: ArchConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(functools.partial(api.init_params, cfg=cfg), key)
+
+
+def opt_struct(params):
+    return jax.eval_shape(init_adamw, params)
+
+
+def batch_struct(cfg: ArchConfig, cell: ShapeCell, with_targets: bool):
+    B, S = cell.global_batch, cell.seq_len
+    S_tok = S - cfg.frontend_tokens if cfg.family == "vlm" else S
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S_tok), jnp.int32)}
+    if with_targets:
+        batch["targets"] = jax.ShapeDtypeStruct((B, S_tok), jnp.int32)
+    if cfg.frontend_tokens:
+        batch["frontend"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+def _ns(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def batch_shardings(mesh: Mesh, batch):
+    return {k: NamedSharding(mesh, batch_spec(mesh, v.ndim,
+                                              batch_size=v.shape[0]))
+            for k, v in batch.items()}
+
+
+def cache_struct_and_sharding(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh):
+    B = cell.global_batch
+    struct = jax.eval_shape(
+        lambda: api.init_cache(cfg, B, max_len=cell.seq_len))
+    batch_one = B == 1
+    specs = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_spec(mesh, _path_names(path), leaf.ndim,
+                                      batch_one=batch_one),
+        struct)
+    return struct, _ns(mesh, specs)
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh):
+    """Returns (fn, args, in_shardings, out_shardings, donate_argnums)."""
+    # pure-DP policy applies to training cells; serving keeps TP so the
+    # KV cache / vocab stay sharded over 'model'.
+    tp = getattr(cfg, "tp_degree", 16)
+    set_tp_degree(1 if (tp == 1 and cell.kind == "train") else 16)
+    pstruct = params_struct(cfg)
+    pspecs = param_specs(pstruct)
+    psh = _ns(mesh, pspecs)
+    repl = NamedSharding(mesh, P())
+
+    if cell.kind == "train":
+        fn = make_train_step(cfg)
+        ostruct = opt_struct(pstruct)
+        osh = _ns(mesh, param_specs(ostruct))
+        batch = batch_struct(cfg, cell, with_targets=True)
+        bsh = batch_shardings(mesh, batch)
+        metrics_sh = {"loss": repl, "grad_norm": repl, "lr": repl}
+        # donate params+opt: the update is in-place on real hardware
+        return (fn, (pstruct, ostruct, batch), (psh, osh, bsh),
+                (psh, osh, metrics_sh), (0, 1))
+
+    if cell.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        batch = batch_struct(cfg, cell, with_targets=False)
+        bsh = batch_shardings(mesh, batch)
+        vocab_axis = None if getattr(cfg, "tp_degree", 16) == 1 else "model"
+        out_sh = NamedSharding(mesh, P(dp_axes(mesh) or None, vocab_axis))
+        return fn, (pstruct, batch), (psh, bsh), out_sh, ()
+
+    # decode: one new token against a seq_len-deep cache
+    fn = make_decode_step(cfg)
+    B = cell.global_batch
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, batch_spec(mesh, 2, shard_batch=B > 1,
+                                            batch_size=B))
+    cstruct, csh = cache_struct_and_sharding(cfg, cell, mesh)
+    # donate the cache: decode updates it in place
+    return (fn, (pstruct, tokens, cstruct), (psh, tok_sh, csh),
+            (tok_sh, csh), (2,))

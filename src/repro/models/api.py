@@ -1,0 +1,38 @@
+"""Family-dispatching model API: one entry point for every architecture.
+
+    init_params(key, cfg)                      -> params
+    forward(params, tokens, cfg, frontend)     -> logits
+    loss_fn(params, tokens, targets, cfg, ...) -> scalar
+    init_cache(cfg, batch, max_len)            -> decode cache
+    decode_step(params, tokens, cache, cfg)    -> (logits, cache)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from ..configs.base import ArchConfig
+from . import encdec, lm
+
+
+def _mod(cfg: ArchConfig):
+    return encdec if cfg.family == "audio" else lm
+
+
+def init_params(key, cfg: ArchConfig):
+    return _mod(cfg).init_params(key, cfg)
+
+
+def forward(params, tokens, cfg: ArchConfig, frontend=None):
+    return _mod(cfg).forward(params, tokens, cfg, frontend)
+
+
+def loss_fn(params, tokens, targets, cfg: ArchConfig, frontend=None):
+    return _mod(cfg).loss_fn(params, tokens, targets, cfg, frontend)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return _mod(cfg).init_cache(cfg, batch, max_len)
+
+
+def decode_step(params, tokens, cache, cfg: ArchConfig):
+    return _mod(cfg).decode_step(params, tokens, cache, cfg)

@@ -1,0 +1,204 @@
+"""GQA attention: training (full-sequence), prefill, and decode-with-cache.
+
+The jnp path below is what the dry-run lowers (XLA attention); the Pallas
+flash-attention kernel (``repro.kernels.flash_attention``) is the TPU-target
+hot-spot implementation, selected with ``cfg.use_pallas`` and validated in
+interpret mode against ``kernels/flash_attention/ref.py``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import apply_rope, causal_mask, dense_init, softcap
+
+NEG_INF = -2.3819763e38          # bf16-safe large negative
+
+
+def init_attn(key, cfg: ArchConfig):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.num_heads * hd),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.num_kv_heads * hd),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.num_kv_heads * hd),
+        "wo": dense_init(ks[3], cfg.num_heads * hd, cfg.d_model),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,))
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,))
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,))
+    return p
+
+
+def _project_qkv(p, x, cfg: ArchConfig, positions):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ArchConfig):
+    """q: [B,Sq,H,hd]; k,v: [B,Sk,Hkv,hd]; mask: [B,Sq,Sk] or [Sq,Sk]."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) / jnp.sqrt(hd).astype(q.dtype)
+    if cfg.attn_softcap > 0:
+        scores = softcap(scores.astype(jnp.float32), cfg.attn_softcap)
+    scores = scores.astype(jnp.float32)
+    m = mask[:, None, None, :, :] if mask.ndim == 3 else mask[None, None, None]
+    scores = jnp.where(m, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, H * hd)
+
+
+QCHUNK = 512          # query-block size for the chunked-attention path
+
+
+def _sdpa_chunked(q, k, v, cfg: ArchConfig, positions, window,
+                  chunk: int = QCHUNK):
+    """Exact attention with O(chunk * S) score memory.
+
+    Scans over query blocks; each block's softmax row is complete (full key
+    range), so this is numerically identical to the direct path while never
+    materializing the [S, S] score matrix — the XLA-level analogue of the
+    flash-attention blocking the Pallas kernel performs in VMEM.
+    """
+    B, S, H, hd = q.shape
+    nQ = S // chunk
+    qb = q.reshape(B, nQ, chunk, H, hd).swapaxes(0, 1)       # [nQ,B,c,H,hd]
+    pb = positions.reshape(B, nQ, chunk).swapaxes(0, 1)      # [nQ,B,c]
+
+    def body(_, inp):
+        qc, qpos = inp
+        mask = causal_mask(qpos, positions, window)          # [B,c,S]
+        return None, _sdpa(qc, k, v, mask, cfg)
+
+    # checkpoint per chunk: the backward pass re-forms each chunk's scores
+    # instead of stashing all nQ chunks' residuals (which would reconstitute
+    # the full [S,S] matrix).
+    body = jax.checkpoint(body)
+    _, outs = jax.lax.scan(body, None, (qb, pb))             # [nQ,B,c,Hhd]
+    return outs.swapaxes(0, 1).reshape(B, S, H * hd)
+
+
+def attention(p, x, cfg: ArchConfig, positions, window=None,
+              use_pallas: Optional[bool] = None):
+    """Full-sequence causal attention (train / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if (cfg.use_pallas if use_pallas is None else use_pallas):
+        from ..kernels.flash_attention.ops import flash_attention
+        out = flash_attention(q, k, v, causal=True,
+                              window=int(window) if window is not None else 0,
+                              softcap=cfg.attn_softcap)
+        out = out.reshape(B, S, -1)
+    elif S > QCHUNK and S % QCHUNK == 0 and not cfg.cost_analysis_mode:
+        out = _sdpa_chunked(q, k, v, cfg, positions, window)
+    else:
+        mask = causal_mask(positions, positions, window)
+        out = _sdpa(q, k, v, mask, cfg)
+    return out @ p["wo"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------- decode
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, layers: int,
+                  dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    shape = (layers, batch, max_len, cfg.num_kv_heads, hd)
+    if cfg.kv_quant:
+        # int8 KV with per-(pos, head) scales: halves cache HBM — the
+        # difference between fitting and not for MHA archs (minicpm).
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1], jnp.bfloat16),
+                "v_scale": jnp.zeros(shape[:-1], jnp.bfloat16),
+                "pos": jnp.zeros((batch,), jnp.int32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def _quantize_row(x):
+    """x: [..., hd] -> (int8 values, bf16 scale over the last dim)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale[..., 0].astype(jnp.bfloat16)
+
+
+def decode_attention(p, x, cfg: ArchConfig, k_cache, v_cache, cache_pos,
+                     window=None):
+    """One-token decode: x [B,1,D]; k/v_cache [B,T,Hkv,hd]; cache_pos [B].
+
+    Returns (out [B,1,D], new_k, new_v)."""
+    B, _, _ = x.shape
+    hd = cfg.resolved_head_dim
+    T = k_cache.shape[1]
+    positions = cache_pos[:, None]                       # [B,1]
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    # in-place style KV insert: dynamic_update_slice touches one row per
+    # sequence instead of the one-hot scatter-add's full-cache read+write
+    # (§Perf decode iteration: halves per-layer cache traffic and lets XLA
+    # alias the donated buffers).
+    def _ins(row, new, pos):
+        return jax.lax.dynamic_update_slice_in_dim(row, new, pos, axis=0)
+
+    k_cache = jax.vmap(_ins)(k_cache, k_new.astype(k_cache.dtype), cache_pos)
+    v_cache = jax.vmap(_ins)(v_cache, v_new.astype(v_cache.dtype), cache_pos)
+    k_pos = jnp.arange(T, dtype=jnp.int32)[None, :].astype(jnp.int32)
+    valid = k_pos <= cache_pos[:, None]                  # [B,T]
+    if window is not None:
+        w = jnp.asarray(window)
+        local = k_pos > (cache_pos[:, None] - w)
+        valid = jnp.where(w > 0, valid & local, valid)
+    mask = valid[:, None, :]                             # [B,1,T]
+    out = _sdpa(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype), mask, cfg)
+    out = out @ p["wo"].astype(x.dtype)
+    return out, k_cache, v_cache
+
+
+def decode_attention_quant(p, x, cfg: ArchConfig, k_cache, v_cache, k_scale,
+                           v_scale, cache_pos, window=None):
+    """int8-KV decode: caches are int8 with per-(pos, head) bf16 scales."""
+    B, _, _ = x.shape
+    T = k_cache.shape[1]
+    positions = cache_pos[:, None]
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    kq, ks_new = _quantize_row(k_new)                    # [B,1,H,hd],[B,1,H]
+    vq, vs_new = _quantize_row(v_new)
+
+    def _ins(row, new, pos):
+        return jax.lax.dynamic_update_slice_in_dim(row, new, pos, axis=0)
+
+    k_cache = jax.vmap(_ins)(k_cache, kq, cache_pos)
+    v_cache = jax.vmap(_ins)(v_cache, vq, cache_pos)
+    k_scale = jax.vmap(_ins)(k_scale, ks_new, cache_pos)
+    v_scale = jax.vmap(_ins)(v_scale, vs_new, cache_pos)
+    k = k_cache.astype(q.dtype) * k_scale.astype(q.dtype)[..., None]
+    v = v_cache.astype(q.dtype) * v_scale.astype(q.dtype)[..., None]
+    k_pos = jnp.arange(T, dtype=jnp.int32)[None, :]
+    valid = k_pos <= cache_pos[:, None]
+    if window is not None:
+        w = jnp.asarray(window)
+        local = k_pos > (cache_pos[:, None] - w)
+        valid = jnp.where(w > 0, valid & local, valid)
+    out = _sdpa(q, k, v, valid[:, None, :], cfg)
+    out = out @ p["wo"].astype(x.dtype)
+    return out, k_cache, v_cache, k_scale, v_scale

@@ -1,0 +1,125 @@
+"""Shared model components: initializers, norms, RoPE, projections.
+
+Everything is functional JAX: params are nested dicts of arrays; layer
+stacks are stored stacked along a leading axis and consumed with
+``jax.lax.scan`` so compile time and HLO size are depth-independent
+(critical for the 40-cell x 2-mesh dry-run matrix).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ----------------------------------------------------------------- initializers
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(in_dim)
+    return jax.random.uniform(key, (in_dim, out_dim), dtype, -scale, scale)
+
+
+VOCAB_PAD_MULTIPLE = 256      # 16 (model) x 16 (data FSDP) shard grid
+
+
+def padded_vocab(vocab: int) -> int:
+    """Embedding tables are padded so both shard axes divide evenly; the
+    padding ids are unreachable (tokens < vocab) and their logits are masked
+    to -inf before softmax/argmax."""
+    m = VOCAB_PAD_MULTIPLE
+    return -(-vocab // m) * m
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return jax.random.normal(key, (padded_vocab(vocab), dim), dtype) * 0.02
+
+
+def mask_vocab_pad(logits, vocab: int):
+    """Mask padded vocab columns to a large negative (softmax/argmax-safe)."""
+    Vp = logits.shape[-1]
+    if Vp == vocab:
+        return logits
+    col = jnp.arange(Vp) >= vocab
+    return jnp.where(col, jnp.asarray(-1e30, logits.dtype), logits)
+
+
+def stacked(keys, fn, *args, **kw):
+    """Initialize a [L, ...] stacked parameter from per-layer keys."""
+    return jnp.stack([fn(k, *args, **kw) for k in keys])
+
+
+# ------------------------------------------------------------------------ norms
+def rms_norm(x, gamma, eps: float = 1e-6):
+    # variance in f32 for stability, but the normalization itself applies in
+    # the compute dtype: activation tensors (and their cotangents) then stay
+    # bf16 end-to-end, halving every resharding collective's payload
+    # (§Perf iteration E).
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * scale * (1.0 + gamma).astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x, cap: float):
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ------------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq].
+
+    Angles in f32; rotation applied in the compute dtype so q/k stay bf16
+    (see rms_norm note — §Perf iteration E)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[..., :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+# ---------------------------------------------------------------------- masking
+def causal_mask(q_pos, k_pos, window: Optional[jnp.ndarray] = None):
+    """Boolean [.., Sq, Sk] mask. ``window``: 0/neg = global causal; >0 =
+    sliding-window causal (key within `window` of query).  ``window`` may be
+    a traced scalar so local/global layer alternation stays scannable."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        w = jnp.asarray(window)
+        local = k_pos[..., None, :] > (q_pos[..., :, None] - w)
+        m = jnp.where(w > 0, m & local, m)
+    return m
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x):
+    return jax.nn.silu(x)

@@ -1,0 +1,195 @@
+"""Encoder-decoder transformer (seamless-m4t-medium backbone).
+
+The speech/text frontend is a spec-compliant stub: ``input_specs`` provides
+precomputed frame embeddings [B, F, D] for the encoder.  The decoder is a
+standard causal transformer with cross-attention; decode uses a self-attn KV
+cache plus cached encoder states.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distrib.sharding import constrain
+from .attention import (NEG_INF, _project_qkv, _sdpa, _sdpa_chunked,
+                        attention, init_attn)
+from .common import apply_rope, causal_mask, dense_init, dtype_of, \
+    embed_init, mask_vocab_pad, padded_vocab, rms_norm
+from .mlp import init_mlp, mlp
+
+Params = Dict[str, Any]
+
+
+def _init_cross_attn(key, cfg: ArchConfig):
+    return init_attn(key, cfg)       # same projection structure
+
+
+def init_enc_layer(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,)),
+        "attn": init_attn(ks[0], cfg),
+        "ln2": jnp.zeros((cfg.d_model,)),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_dec_layer(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,)),
+        "attn": init_attn(ks[0], cfg),
+        "lnx": jnp.zeros((cfg.d_model,)),
+        "xattn": _init_cross_attn(ks[1], cfg),
+        "ln2": jnp.zeros((cfg.d_model,)),
+        "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    ek = jax.random.split(ks[0], cfg.encoder_layers)
+    dk = jax.random.split(ks[1], cfg.num_layers)
+    p = {
+        "embed": embed_init(ks[2], cfg.vocab_size, cfg.d_model),
+        "enc_layers": jax.vmap(lambda k: init_enc_layer(k, cfg))(ek),
+        "dec_layers": jax.vmap(lambda k: init_dec_layer(k, cfg))(dk),
+        "enc_norm": jnp.zeros((cfg.d_model,)),
+        "final_norm": jnp.zeros((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[3], cfg.d_model,
+                                  padded_vocab(cfg.vocab_size))
+    return p
+
+
+def _cross_attention(p, x, enc, cfg: ArchConfig):
+    """x: [B,Sq,D] queries; enc: [B,Sk,D] encoder states (keys/values).
+    Long decoder sequences scan over query blocks (chunked attention)."""
+    B, Sq, _ = x.shape
+    Sk = enc.shape[1]
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, Sq, cfg.num_heads, hd)
+    k = (enc @ p["wk"].astype(x.dtype)).reshape(B, Sk, cfg.num_kv_heads, hd)
+    v = (enc @ p["wv"].astype(x.dtype)).reshape(B, Sk, cfg.num_kv_heads, hd)
+    chunk = 512
+    if Sq > chunk and Sq % chunk == 0:
+        nQ = Sq // chunk
+        qb = q.reshape(B, nQ, chunk, cfg.num_heads, hd).swapaxes(0, 1)
+
+        def body(_, qc):
+            mask = jnp.ones((chunk, Sk), bool)
+            return None, _sdpa(qc, k, v, mask, cfg)
+
+        _, outs = jax.lax.scan(jax.checkpoint(body), None, qb)
+        out = outs.swapaxes(0, 1).reshape(B, Sq, cfg.num_heads * hd)
+    else:
+        mask = jnp.ones((Sq, Sk), bool)
+        out = _sdpa(q, k, v, mask, cfg)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def encode(params: Params, frames, cfg: ArchConfig):
+    """frames: [B, F, D] stub embeddings -> encoder states [B, F, D]."""
+    cdt = dtype_of(cfg.dtype)
+    x = frames.astype(cdt)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(xc, lp):
+        h = rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        # bidirectional self-attention
+        q, k, v = _project_qkv(lp["attn"], h, cfg, positions)
+        mask = jnp.ones((S, S), bool)
+        a = _sdpa(q, k, v, mask, cfg) @ lp["attn"]["wo"].astype(xc.dtype)
+        xc = xc + a
+        h = rms_norm(xc, lp["ln2"], cfg.norm_eps)
+        return xc + mlp(lp["mlp"], h), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params: Params, tokens, cfg: ArchConfig,
+            frontend: Optional[jnp.ndarray] = None):
+    """Full enc-dec forward: frames -> encoder; tokens -> decoder logits."""
+    enc = encode(params, frontend, cfg)
+    cdt = dtype_of(cfg.dtype)
+    x = params["embed"][tokens].astype(cdt)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(xc, lp):
+        h = rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        a = attention(lp["attn"], h, cfg, positions)   # chunked-causal
+        xc = xc + a
+        h = rms_norm(xc, lp["lnx"], cfg.norm_eps)
+        xc = xc + _cross_attention(lp["xattn"], h, enc, cfg)
+        h = rms_norm(xc, lp["ln2"], cfg.norm_eps)
+        xc = xc + mlp(lp["mlp"], h)
+        if xc.shape[1] % 16 == 0:
+            xc = constrain(xc, "dp", "model", None)    # sequence-parallel
+        return xc, None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    logits = x @ head
+    logits = constrain(logits, "dp", None, "model")
+    return mask_vocab_pad(logits, cfg.vocab_size)
+
+
+def loss_fn(params: Params, tokens, targets, cfg: ArchConfig,
+            frontend: Optional[jnp.ndarray] = None):
+    from .lm import cross_entropy
+    logits = forward(params, tokens, cfg, frontend)
+    return cross_entropy(logits, targets)
+
+
+# --------------------------------------------------------------------- decode
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
+    hd = cfg.resolved_head_dim
+    L = cfg.num_layers
+    return {
+        "k": jnp.zeros((L, batch, max_len, cfg.num_kv_heads, hd), jnp.bfloat16),
+        "v": jnp.zeros((L, batch, max_len, cfg.num_kv_heads, hd), jnp.bfloat16),
+        "enc": jnp.zeros((batch, cfg.frontend_tokens, cfg.d_model),
+                         jnp.bfloat16),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(params: Params, tokens, cache: Params, cfg: ArchConfig):
+    """One decoder step with cached encoder states."""
+    from .attention import decode_attention
+    cdt = dtype_of(cfg.dtype)
+    x = params["embed"][tokens].astype(cdt)
+    pos = cache["pos"]
+    enc = cache["enc"].astype(cdt)
+
+    def body(xc, inp):
+        lp, kc, vc = inp
+        h = rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        a, k2, v2 = decode_attention(lp["attn"], h, cfg, kc, vc, pos)
+        xc = xc + a
+        h = rms_norm(xc, lp["lnx"], cfg.norm_eps)
+        xc = xc + _cross_attention(lp["xattn"], h, enc, cfg)
+        h = rms_norm(xc, lp["ln2"], cfg.norm_eps)
+        return xc + mlp(lp["mlp"], h), (k2, v2)
+
+    x, (k2, v2) = jax.lax.scan(body, x, (params["dec_layers"], cache["k"],
+                                         cache["v"]))
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = k2, v2
+    new_cache["pos"] = pos + 1
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    logits = constrain(x @ head, "dp", None, "model")
+    return mask_vocab_pad(logits, cfg.vocab_size), new_cache

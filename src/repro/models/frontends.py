@@ -1,0 +1,29 @@
+"""Modality frontends — spec-compliant stubs.
+
+Per the assignment: ``[vlm]``/``[audio]`` entries specify the transformer
+BACKBONE only; the modality frontend is a STUB whose ``input_specs()``
+provides precomputed frame/patch embeddings.  These helpers generate the
+stand-in shapes (for the dry-run) and deterministic synthetic embeddings
+(for smoke tests / the quickstart example).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+
+def frontend_shape(cfg: ArchConfig, batch: int):
+    """Shape of the precomputed patch/frame embeddings."""
+    if cfg.frontend_tokens <= 0:
+        return None
+    return (batch, cfg.frontend_tokens, cfg.d_model)
+
+
+def synthetic_frontend(cfg: ArchConfig, batch: int, seed: int = 0):
+    shape = frontend_shape(cfg, batch)
+    if shape is None:
+        return None
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, shape, jnp.float32) * 0.02

@@ -1,0 +1,436 @@
+"""Language-model assembly for every non-enc-dec family in the zoo.
+
+Layers are stored stacked ([L, ...] leading axis) and consumed with
+``jax.lax.scan`` so HLO size and compile time are depth-independent; per-layer
+heterogeneity (gemma2's local/global alternation) is expressed with scanned
+per-layer scalars (the sliding-window size), never with Python-level layer
+loops.  ``jax.checkpoint`` around the scanned body implements activation
+rematerialization for training.
+
+Families:
+  dense / vlm       — GQA attention + gated MLP (VLM: patch embeddings from
+                      the frontend stub are prepended to the token stream)
+  moe               — GQA attention + top-k MoE FFN
+  hybrid (hymba)    — parallel attention ∥ SSM heads + gated MLP
+  ssm (xlstm)       — mLSTM groups with interleaved sLSTM blocks, no FFN
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distrib.sharding import constrain, tp_degree
+from .attention import (attention, decode_attention, decode_attention_quant,
+                        init_attn, init_kv_cache)
+from .common import (dense_init, dtype_of, embed_init, mask_vocab_pad,
+                     padded_vocab, rms_norm, softcap)
+from .mlp import init_mlp, mlp
+from .moe import init_moe, moe as moe_apply, moe_dense
+from .ssm import init_ssm, init_ssm_cache, ssm_decode_step, ssm_forward
+from .xlstm import (init_mlstm, init_mlstm_cache, init_slstm,
+                    init_slstm_cache, mlstm_decode_step, mlstm_forward,
+                    slstm_decode_step, slstm_forward)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------- init
+def _layer_keys(key, n):
+    return jax.random.split(key, n)
+
+
+def init_layer(key, cfg: ArchConfig) -> Params:
+    """One block's parameters (unstacked)."""
+    ks = jax.random.split(key, 6)
+    p: Params = {"ln1": jnp.zeros((cfg.d_model,))}
+    if cfg.family in ("dense", "vlm", "moe", "hybrid"):
+        p["attn"] = init_attn(ks[0], cfg)
+        p["ln2"] = jnp.zeros((cfg.d_model,))
+        if cfg.family == "moe":
+            p["moe"] = init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+        if cfg.family == "hybrid":
+            p["ssm"] = init_ssm(ks[2], cfg.d_model, cfg.ssm)
+        if cfg.post_norms:
+            p["pn1"] = jnp.zeros((cfg.d_model,))
+            p["pn2"] = jnp.zeros((cfg.d_model,))
+    return p
+
+
+def group_factor(L: int) -> int:
+    """Outer-group count for two-level remat: the divisor of L minimizing
+    saved-activation count (G outer group inputs + L/G inner layer inputs)."""
+    best = 1
+    best_cost = L + 1
+    for g in range(1, L + 1):
+        if L % g == 0:
+            cost = g + L // g
+            if cost < best_cost:
+                best_cost = cost
+                best = g
+    return best
+
+
+def layer_windows(cfg: ArchConfig) -> jnp.ndarray:
+    """Per-layer sliding-window sizes (0 = global causal)."""
+    L = cfg.num_layers
+    if cfg.local_global_pattern and cfg.sliding_window:
+        w = [cfg.sliding_window if i % 2 == 0 else 0 for i in range(L)]
+    elif cfg.sliding_window:
+        w = [cfg.sliding_window] * L
+    else:
+        w = [0] * L
+    return jnp.asarray(w, jnp.int32)
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": jnp.zeros((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], cfg.d_model,
+                                  padded_vocab(cfg.vocab_size))
+    if cfg.family == "ssm":          # xlstm supergroups
+        xc = cfg.xlstm
+        G = cfg.num_layers // xc.slstm_every
+        M = xc.slstm_every - 1       # mLSTM blocks per group
+        mk = jax.random.split(ks[2], G * M).reshape(G, M, 2)
+        p["mlstm"] = jax.vmap(jax.vmap(lambda k: init_mlstm(k, cfg)))(mk)
+        p["ln_m"] = jnp.zeros((G, M, cfg.d_model))
+        sk = jax.random.split(ks[3], G)
+        p["slstm"] = jax.vmap(lambda k: init_slstm(k, cfg))(sk)
+        p["ln_s"] = jnp.zeros((G, cfg.d_model))
+    else:
+        lk = _layer_keys(ks[2], cfg.num_layers)
+        p["layers"] = jax.vmap(lambda k: init_layer(k, cfg))(lk)
+    return p
+
+
+# -------------------------------------------------------------- block bodies
+SEQ_SHARD_MIN_BYTES = 0        # (§Perf iteration D — REFUTED: disabling SP
+                               # for small models doubled the all-reduce
+                               # traffic; AG+RS + small saves always won.)
+
+
+def _seq_shard(x):
+    """Megatron-style sequence parallelism: between blocks the residual
+    stream lives S-sharded over the 'model' axis, so remat saves and
+    norm/residual math are 1/TP-degree sized; XLA inserts the all-gather
+    into the TP-sharded attention/FFN and the reduce-scatter back.
+
+    Size-aware (§Perf iteration D): for small models the residual stream
+    fits comfortably unsharded and the per-layer gather/scatter ping-pong
+    dominates the collective term — skip SP below the threshold."""
+    if tp_degree() == 1:              # pure DP: nothing to sequence-shard
+        return x
+    if x.shape[1] % 16 != 0:          # S must divide the TP degree
+        return x
+    per_dev_bytes = (x.size // 16) * x.dtype.itemsize   # batch already /16
+    if per_dev_bytes < SEQ_SHARD_MIN_BYTES:
+        return x
+    return constrain(x, "dp", "model", None)
+
+
+def _block(p, x, cfg: ArchConfig, positions, window):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    # (§Perf iteration C — REFUTED and reverted: explicitly pinning the
+    # sequence-parallel gather here forced full activation gathers; XLA's
+    # own propagation keeps Q sequence-sharded and gathers only K/V.)
+    a = attention(p["attn"], h, cfg, positions, window=window)
+    if cfg.family == "hybrid":
+        s = ssm_forward(p["ssm"], h, cfg)
+        a = 0.5 * (a + s)            # hymba: parallel attn+SSM head fusion
+    if cfg.post_norms:
+        a = rms_norm(a, p["pn1"], cfg.norm_eps)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        from ..distrib.sharding import active_mesh
+        f = moe_apply(p["moe"], h, cfg, mesh=active_mesh())
+    else:
+        f = mlp(p["mlp"], h)
+    if cfg.post_norms:
+        f = rms_norm(f, p["pn2"], cfg.norm_eps)
+    return _seq_shard(x + f)
+
+
+def _xlstm_group(pm, ps, lnm, lns, x, cfg: ArchConfig):
+    """One supergroup: M mLSTM blocks then one sLSTM block."""
+    def m_body(xc, inp):
+        lp, ln = inp
+        y = mlstm_forward(lp, rms_norm(xc, ln, cfg.norm_eps), cfg)
+        return xc + y, None
+
+    if cfg.remat:
+        m_body = jax.checkpoint(m_body)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(m_body, x, (pm, lnm))
+    else:                                 # unrolled (cost-analysis variants)
+        M = jax.tree.leaves(pm)[0].shape[0]
+        for i in range(M):
+            x, _ = m_body(x, (jax.tree.map(lambda a: a[i], pm), lnm[i]))
+    y = slstm_forward(ps, rms_norm(x, lns, cfg.norm_eps), cfg)
+    return x + y
+
+
+# ------------------------------------------------------------------- forward
+def hidden_forward(params: Params, tokens, cfg: ArchConfig,
+                   frontend: Optional[jnp.ndarray] = None):
+    """tokens: [B, S_tok] int32; frontend: [B, F, D] stub embeddings
+    (vlm/audio) prepended to the token stream.  Returns final hidden states
+    [B, S, D] (post final-norm) — the head is applied by the caller so the
+    training loss can fuse projection + CE chunkwise."""
+    cdt = dtype_of(cfg.dtype)
+    x = params["embed"][tokens].astype(cdt)
+    if cfg.family in ("vlm",) and frontend is not None:
+        x = jnp.concatenate([frontend.astype(cdt), x], axis=1)
+    x = constrain(x, "dp", None, None)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cdt)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    if cfg.family == "ssm":
+        def g_body(xc, inp):
+            pm, ps, lnm, lns = inp
+            return _xlstm_group(pm, ps, lnm, lns, xc, cfg), None
+
+        body = jax.checkpoint(g_body) if cfg.remat else g_body
+        tree = (params["mlstm"], params["slstm"], params["ln_m"],
+                params["ln_s"])
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, tree)
+        else:                             # unrolled (cost-analysis variants)
+            G = params["ln_s"].shape[0]
+            for g in range(G):
+                x, _ = body(x, jax.tree.map(lambda a: a[g], tree))
+    else:
+        windows = layer_windows(cfg)
+
+        def body(xc, inp):
+            lp, w = inp
+            return _block(lp, xc, cfg, positions, w), None
+
+        if not cfg.scan_layers:
+            body = jax.checkpoint(body) if cfg.remat else body
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                x, _ = body(x, (lp, windows[i]))
+        elif cfg.remat:
+            # two-level (sqrt) remat: outer scan over G groups saves only
+            # group inputs; the checkpointed inner scan over L/G layers
+            # re-saves layer inputs during each group's backward replay.
+            L = cfg.num_layers
+            G = group_factor(L)
+            grouped = jax.tree.map(
+                lambda a: a.reshape(G, L // G, *a.shape[1:]),
+                (params["layers"], windows))
+
+            def group_body(xc, ginp):
+                y, _ = jax.lax.scan(jax.checkpoint(body), xc, ginp)
+                return y, None
+
+            x, _ = jax.lax.scan(jax.checkpoint(group_body), x, grouped)
+        else:
+            x, _ = jax.lax.scan(body, x, (params["layers"], windows))
+
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def _head(params: Params, cfg: ArchConfig, dtype):
+    return (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(dtype)
+
+
+def forward(params: Params, tokens, cfg: ArchConfig,
+            frontend: Optional[jnp.ndarray] = None):
+    """Returns logits [B, S, V] (serving / small-scale use)."""
+    x = hidden_forward(params, tokens, cfg, frontend)
+    logits = x @ _head(params, cfg, x.dtype)
+    logits = constrain(logits, "dp", None, "model")   # vocab-sharded logits
+    if cfg.logit_softcap > 0:
+        logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return mask_vocab_pad(logits, cfg.vocab_size)
+
+
+def cross_entropy(logits, targets):
+    """Vocab-sharding-friendly CE: logsumexp minus a one-hot contraction —
+    never gathers across the sharded vocab axis (no all-gather of logits)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)                     # [B,S]
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.float32)
+    tgt = jnp.sum(logits * onehot, axis=-1)                     # [B,S]
+    return (lse - tgt).mean()
+
+
+CE_CHUNK = 512
+
+
+def chunked_head_ce(x, head, targets, cap: float, vocab: int,
+                    chunk: int = CE_CHUNK):
+    """Fused final-projection + CE over sequence chunks.
+
+    Never materializes the full [B, S, V] logits: each scan step projects a
+    [B, chunk, D] slice, softcaps, and reduces to a scalar; ``jax.checkpoint``
+    makes the backward re-form each chunk's logits instead of storing them.
+    """
+    B, S, D = x.shape
+    nQ = S // chunk
+    xb = x.reshape(B, nQ, chunk, D).swapaxes(0, 1)
+    tb = targets.reshape(B, nQ, chunk).swapaxes(0, 1)
+
+    def body(acc, inp):
+        xc, tc = inp
+        logits = xc @ head
+        logits = constrain(logits, "dp", None, "model")
+        logits = logits.astype(jnp.float32)
+        if cap > 0:
+            logits = softcap(logits, cap)
+        logits = mask_vocab_pad(logits, vocab)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(tc, logits.shape[-1], dtype=jnp.float32)
+        tgt = jnp.sum(logits * onehot, axis=-1)
+        return acc + jnp.sum(lse - tgt), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32),
+                            (xb, tb))
+    return total / (B * S)
+
+
+def loss_fn(params: Params, tokens, targets, cfg: ArchConfig,
+            frontend: Optional[jnp.ndarray] = None):
+    """Next-token cross-entropy averaged over target tokens."""
+    x = hidden_forward(params, tokens, cfg, frontend)
+    if frontend is not None and cfg.family == "vlm":
+        x = x[:, frontend.shape[1]:, :]               # loss on text only
+    head = _head(params, cfg, x.dtype)
+    if x.shape[1] % CE_CHUNK == 0 and x.shape[1] > CE_CHUNK \
+            and not cfg.cost_analysis_mode:
+        return chunked_head_ce(x, head, targets, cfg.logit_softcap,
+                               cfg.vocab_size)
+    logits = x @ head
+    logits = constrain(logits, "dp", None, "model")
+    if cfg.logit_softcap > 0:
+        logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    logits = mask_vocab_pad(logits, cfg.vocab_size)
+    return cross_entropy(logits, targets)
+
+
+# --------------------------------------------------------------------- decode
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
+    """Stacked per-layer decode state."""
+    if cfg.family == "ssm":
+        xc = cfg.xlstm
+        G = cfg.num_layers // xc.slstm_every
+        M = xc.slstm_every - 1
+        m = init_mlstm_cache(cfg, batch, G * M)
+        s = init_slstm_cache(cfg, batch, G)
+        return {
+            "mlstm": jax.tree.map(
+                lambda a: a.reshape(G, M, *a.shape[1:]), m),
+            "slstm": s,
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    cache: Params = init_kv_cache(cfg, batch, max_len, cfg.num_layers)
+    if cfg.family == "hybrid":
+        cache["ssm"] = init_ssm_cache(cfg, batch, cfg.num_layers)
+    return cache
+
+
+def decode_step(params: Params, tokens, cache: Params, cfg: ArchConfig):
+    """One decode step. tokens: [B,1] int32. Returns (logits [B,1,V], cache)."""
+    cdt = dtype_of(cfg.dtype)
+    x = params["embed"][tokens].astype(cdt)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cdt)
+    pos = cache["pos"]
+
+    if cfg.family == "ssm":
+        def g_body(xc, inp):
+            pm, ps, lnm, lns, mc, sc = inp
+
+            def m_body(xm, minp):
+                lp, ln, st, cv = minp
+                h = rms_norm(xm, ln, cfg.norm_eps)
+                y, st2, cv2 = mlstm_decode_step(lp, h, cfg, st, cv)
+                return xm + y, (st2, cv2)
+
+            xc, mstates = jax.lax.scan(
+                m_body, xc, (pm, lnm, mc["state"], mc["conv"]))
+            h = rms_norm(xc, lns, cfg.norm_eps)
+            y, hh, cc, nn = slstm_decode_step(ps, h, cfg,
+                                              sc["h"], sc["c"], sc["n"])
+            xc = xc + y
+            return xc, ({"state": mstates[0], "conv": mstates[1]},
+                        {"h": hh, "c": cc, "n": nn})
+
+        x, (mc2, sc2) = jax.lax.scan(
+            g_body, x, (params["mlstm"], params["slstm"], params["ln_m"],
+                        params["ln_s"], cache["mlstm"], cache["slstm"]))
+        new_cache = {"mlstm": mc2, "slstm": sc2, "pos": pos + 1}
+    else:
+        windows = layer_windows(cfg)
+
+        def body(xc, inp):
+            if cfg.kv_quant:
+                lp, w, kc, vc, ksc, vsc, *rest = inp
+            else:
+                lp, w, kc, vc, *rest = inp
+            h = rms_norm(xc, lp["ln1"], cfg.norm_eps)
+            if cfg.kv_quant:
+                a, k2, v2, ks2, vs2 = decode_attention_quant(
+                    lp["attn"], h, cfg, kc, vc, ksc, vsc, pos, window=w)
+                kv_out = (k2, v2, ks2, vs2)
+            else:
+                a, k2, v2 = decode_attention(lp["attn"], h, cfg, kc, vc, pos,
+                                             window=w)
+                kv_out = (k2, v2)
+            extra = ()
+            if cfg.family == "hybrid":
+                st, cv = rest
+                s, st2, cv2 = ssm_decode_step(lp["ssm"], h, cfg, st, cv)
+                a = 0.5 * (a + s)
+                extra = (st2, cv2)
+            if cfg.post_norms:
+                a = rms_norm(a, lp["pn1"], cfg.norm_eps)
+            xc = xc + a
+            h = rms_norm(xc, lp["ln2"], cfg.norm_eps)
+            f = moe_dense(lp["moe"], h, cfg) if cfg.family == "moe" \
+                else mlp(lp["mlp"], h)
+            if cfg.post_norms:
+                f = rms_norm(f, lp["pn2"], cfg.norm_eps)
+            return xc + f, kv_out + extra
+
+        ins = (params["layers"], windows, cache["k"], cache["v"])
+        if cfg.kv_quant:
+            ins = ins + (cache["k_scale"], cache["v_scale"])
+        if cfg.family == "hybrid":
+            ins = ins + (cache["ssm"]["state"], cache["ssm"]["conv"])
+        # (unrolled decode with .at[i] updates was tried and REFUTED:
+        # per-layer resharding collectives exploded — see EXPERIMENTS.md)
+        x, outs = jax.lax.scan(body, x, ins)
+        new_cache = dict(cache)
+        new_cache["k"], new_cache["v"] = outs[0], outs[1]
+        nxt = 2
+        if cfg.kv_quant:
+            new_cache["k_scale"], new_cache["v_scale"] = outs[2], outs[3]
+            nxt = 4
+        if cfg.family == "hybrid":
+            new_cache["ssm"] = {"state": outs[nxt], "conv": outs[nxt + 1]}
+        new_cache["pos"] = pos + 1
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    logits = x @ head
+    logits = constrain(logits, "dp", None, "model")   # vocab-sharded logits
+    if cfg.logit_softcap > 0:
+        logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return mask_vocab_pad(logits, cfg.vocab_size), new_cache

@@ -1,0 +1,23 @@
+"""Gated MLP (SwiGLU / GeGLU) feed-forward blocks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import dense_init, gelu, silu
+
+
+def init_mlp(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff),
+        "w_up": dense_init(ks[1], d_model, d_ff),
+        "w_down": dense_init(ks[2], d_ff, d_model),
+    }
+
+
+def mlp(p, x, activation: str = "silu"):
+    act = silu if activation == "silu" else gelu
+    h = act(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+    return h @ p["w_down"].astype(x.dtype)

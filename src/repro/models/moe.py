@@ -1,0 +1,185 @@
+"""Mixture-of-Experts layers: top-k routing with two execution strategies.
+
+``impl="dense"`` — masked dense compute: every expert processes every token,
+   masked by routing weights.  Trivially shardable by XLA SPMD (experts live
+   on the 'model' axis), numerically exact, but computes E/K times the active
+   FLOPs.  This is the *baseline* the §Perf hillclimb starts from.
+
+``impl="ep"`` — expert parallelism: tokens are routed to expert shards with
+   an all-to-all inside ``shard_map``; each shard computes only its local
+   experts over the tokens routed to it (capacity-bounded, dropless up to the
+   capacity factor).  Active-FLOPs-proportional compute at the price of two
+   all-to-alls per MoE layer — the classic EP trade, surfaced in the roofline
+   collective term.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig, MoEConfig
+from .common import dense_init, silu
+from .mlp import init_mlp, mlp
+
+
+def init_moe(key, cfg: ArchConfig, expert_shards: int = 16):
+    mo = cfg.moe
+    ks = jax.random.split(key, 5)
+    d, f = cfg.d_model, mo.d_expert
+    E = padded_experts(mo, expert_shards)
+    p = {
+        "router": dense_init(ks[0], d, E),
+        # stacked expert weights [E, ...]
+        "w_gate": jax.vmap(lambda k: dense_init(k, d, f))(
+            jax.random.split(ks[1], E)),
+        "w_up": jax.vmap(lambda k: dense_init(k, d, f))(
+            jax.random.split(ks[2], E)),
+        "w_down": jax.vmap(lambda k: dense_init(k, f, d))(
+            jax.random.split(ks[3], E)),
+    }
+    if mo.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, mo.d_shared or mo.d_expert)
+    return p
+
+
+def padded_experts(mo: MoEConfig, expert_shards: int = 16) -> int:
+    """Experts padded up to a multiple of the expert-shard count so both the
+    dense-masked einsums and EP all-to-alls shard evenly (granite: 40->48)."""
+    E = mo.num_experts
+    return -(-E // expert_shards) * expert_shards
+
+
+def _route(p, x, mo: MoEConfig):
+    """Returns (weights [B,S,K] fp32 normalized, idx [B,S,K] int32)."""
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    E = p["router"].shape[-1]
+    if E > mo.num_experts:      # padding experts can never be routed to
+        pad_mask = jnp.arange(E) >= mo.num_experts
+        logits = jnp.where(pad_mask, -1e30, logits)
+    weights, idx = jax.lax.top_k(logits, mo.top_k)
+    weights = jax.nn.softmax(weights, axis=-1)
+    return weights, idx.astype(jnp.int32)
+
+
+# ------------------------------------------------------------------ dense path
+def moe_dense(p, x, cfg: ArchConfig):
+    """Masked dense MoE: out = sum_e gate_e(x) * FFN_e(x).
+
+    Computes every (padded) expert for every token — E/K x the active FLOPs;
+    the §Perf hillclimb replaces this with the EP path.  The down-projection
+    is fused with the combine weights so no [B,S,E,D] intermediate exists.
+    """
+    mo = cfg.moe
+    E = p["router"].shape[-1]
+    weights, idx = _route(p, x, mo)
+    combine = jax.nn.one_hot(idx, E, dtype=jnp.float32)          # [B,S,K,E]
+    combine = jnp.einsum("bske,bsk->bse", combine, weights).astype(x.dtype)
+    h = jnp.einsum("bsd,edf->bsef", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,edf->bsef", x, p["w_up"].astype(x.dtype))
+    h = silu(h) * u
+    h = h * combine[..., None]
+    out = jnp.einsum("bsef,efd->bsd", h, p["w_down"].astype(x.dtype))
+    if mo.num_shared_experts:
+        out = out + mlp(p["shared"], x)
+    return out
+
+
+# --------------------------------------------------------------------- EP path
+def moe_ep(p, x, cfg: ArchConfig, mesh, expert_axis: str = "model",
+           capacity_factor: float = 1.25):
+    """Expert-parallel MoE: shard_map + all-to-all with PER-EXPERT capacity
+    buffers (§Perf hillclimb for the MoE cells).
+
+    Layout: tokens enter [B, S, D] with B over the DP axes and S over the
+    'model' axis (the sequence-parallel residual layout); experts are
+    sharded over 'model'.  Per shard:
+
+      1. route its T_loc tokens, build a send buffer [E, C, D] with slot
+         rank computed per EXPERT (not per shard);
+      2. tiled all_to_all over 'model' exchanges expert blocks: each shard
+         ends up holding [n_shards, E_local, C, D] for ITS experts;
+      3. grouped per-expert batched matmuls — active-FLOPs proportional
+         (E_local x (n*C) x 4df ~= K/E-fraction of dense-masked compute);
+      4. reverse all_to_all + weighted combine into token slots.
+
+    Dropless up to ``capacity_factor``; overflow tokens fall back to zero
+    contribution for that expert choice (standard capacity semantics).
+    """
+    shard_map = jax.shard_map
+
+    mo = cfg.moe
+    n = mesh.shape[expert_axis]
+    E_pad = p["router"].shape[-1]
+    E_local = E_pad // n
+    assert E_local * n == E_pad
+    dp = [a for a in ("pod", "data") if a in mesh.axis_names]
+
+    def local_fn(router, w_gate, w_up, w_down, xs):
+        b, s_loc, D = xs.shape
+        T = b * s_loc
+        xt = xs.reshape(T, D)
+        logits = xt.astype(jnp.float32) @ router.astype(jnp.float32)
+        if E_pad > mo.num_experts:
+            pad_mask = jnp.arange(E_pad) >= mo.num_experts
+            logits = jnp.where(pad_mask, -1e30, logits)
+        weights, idx = jax.lax.top_k(logits, mo.top_k)        # [T, K]
+        weights = jax.nn.softmax(weights, axis=-1)
+        # per-expert capacity
+        C = int(capacity_factor * mo.top_k * T / E_pad)
+        C = max(4, -(-C // 4) * 4)
+        flat_e = idx.reshape(-1)                              # [T*K]
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        seg_start = jnp.concatenate([
+            jnp.zeros((1,), jnp.int32),
+            jnp.cumsum(jnp.bincount(sorted_e, length=E_pad))[:-1]
+            .astype(jnp.int32)])
+        pos = jnp.arange(T * mo.top_k, dtype=jnp.int32)
+        rank = jnp.zeros_like(pos).at[order].set(pos - seg_start[sorted_e])
+        keep = rank < C
+        e_sel = jnp.where(keep, flat_e, 0)
+        r_sel = jnp.where(keep, rank, C - 1)
+        tok_of = jnp.repeat(jnp.arange(T, dtype=jnp.int32), mo.top_k)
+        send = jnp.zeros((E_pad, C, D), xs.dtype)
+        send = send.at[e_sel, r_sel].add(
+            jnp.where(keep[:, None], xt[tok_of], 0).astype(xs.dtype))
+        # exchange expert blocks: shard j receives block j from every peer
+        recv = jax.lax.all_to_all(send, expert_axis, 0, 0, tiled=True)
+        # [n * E_local, C, D] -> [E_local, n*C, D] (peer-major slots)
+        recv = recv.reshape(n, E_local, C, D).transpose(1, 0, 2, 3) \
+            .reshape(E_local, n * C, D)
+        h = jnp.einsum("ecd,edf->ecf", recv, w_gate.astype(recv.dtype))
+        u = jnp.einsum("ecd,edf->ecf", recv, w_up.astype(recv.dtype))
+        y = jnp.einsum("ecf,efd->ecd", silu(h) * u,
+                       w_down.astype(recv.dtype))
+        y = y.reshape(E_local, n, C, D).transpose(1, 0, 2, 3) \
+            .reshape(E_pad, C, D)
+        back = jax.lax.all_to_all(y, expert_axis, 0, 0, tiled=True)
+        flat = back.reshape(E_pad * C, D)                     # [E*C, D]
+        per_k = jnp.where(keep[:, None], flat[e_sel * C + r_sel], 0)
+        per_k = per_k.reshape(T, mo.top_k, D).astype(jnp.float32)
+        out = jnp.einsum("tkd,tk->td", per_k, weights).astype(xs.dtype)
+        return out.reshape(b, s_loc, D)
+
+    espec = P(expert_axis)
+    token_spec = P(tuple(dp) if dp else None, expert_axis, None)
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(), espec, espec, espec, token_spec),
+        out_specs=token_spec,
+        check_vma=False)
+    out = fn(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)
+    if mo.num_shared_experts:
+        out = out + mlp(p["shared"], x)
+    return out
+
+
+def moe(p, x, cfg: ArchConfig, mesh=None):
+    mo = cfg.moe
+    if mo.impl == "ep" and mesh is not None:
+        return moe_ep(p, x, cfg, mesh)
+    return moe_dense(p, x, cfg)

@@ -1,0 +1,186 @@
+"""Mamba-2 (SSD)-style selective SSM block — used standalone and inside
+hymba's parallel attention+SSM heads.
+
+Hardware adaptation (DESIGN.md Sec. 2): the original Mamba CUDA kernel is a
+warp-level scan — a GPU-specific mechanism.  The TPU-native analogue is the
+SSD *chunked* formulation: within a chunk of length c the recurrence is a
+decay-masked attention-like matmul (MXU-friendly [c,c] per head); chunk
+boundary states propagate with a short ``lax.scan``.  All exponentials are
+of non-positive arguments (pairwise cumulative-decay differences), so the
+computation is overflow-safe by construction.
+
+State layout per head: matrix state [N, P] (N = ssm.state_dim, P = head
+channels), identical to the mLSTM matrix memory — the Pallas kernel
+``repro.kernels.mlstm_chunk`` implements this same chunk pattern.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, SSMConfig
+from .common import dense_init, silu
+
+
+def _heads_for(d_inner: int) -> Tuple[int, int]:
+    """Split d_inner into (H heads, P channels) with P a multiple of 8."""
+    P = 64
+    while d_inner % P and P > 8:
+        P //= 2
+    H = d_inner // P
+    return H, P
+
+
+def init_ssm(key, d_model: int, ssm: SSMConfig):
+    d_inner = ssm.expand * d_model
+    H, _ = _heads_for(d_inner)
+    N = ssm.state_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], d_model, 2 * d_inner),       # u and gate z
+        "conv_w": jax.random.normal(ks[1], (ssm.conv_kernel, d_inner)) * 0.1,
+        "w_bc": dense_init(ks[2], d_inner, 2 * N),             # B, C (shared)
+        "w_dt": dense_init(ks[3], d_inner, H),                 # per-head dt
+        "dt_bias": jnp.zeros((H,)),
+        "a_log": jnp.zeros((H,)),                              # A = -exp(a_log)
+        "d_skip": jnp.ones((d_inner,)),
+        "w_out": dense_init(ks[4], d_inner, d_model),
+    }
+
+
+def _causal_conv(x, w):
+    """x: [B,S,D]; w: [K,D] depthwise causal conv."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for k in range(K):
+        out = out + pad[:, k:k + x.shape[1], :] * w[k][None, None, :]
+    return out
+
+
+def ssd_scan(u, dt, a, B, C, chunk: int):
+    """SSD chunked scan.
+
+    u:  [Bb, S, H, P]   inputs per head
+    dt: [Bb, S, H]      positive step sizes
+    a:  [H]             negative per-head decay rates (A = -exp(a_log))
+    B, C: [Bb, S, N]    shared input/output projections
+    Returns y: [Bb, S, H, P].
+    """
+    Bb, S, H, P = u.shape
+    N = B.shape[-1]
+    c = min(chunk, S)
+    nC = S // c
+    assert nC * c == S, f"seq {S} must divide chunk {c}"
+
+    u_ = u.reshape(Bb, nC, c, H, P)
+    dt_ = dt.reshape(Bb, nC, c, H)
+    B_ = B.reshape(Bb, nC, c, N)
+    C_ = C.reshape(Bb, nC, c, N)
+
+    la = dt_ * a[None, None, None, :]                  # log-decay per step (<=0)
+    cum = jnp.cumsum(la, axis=2)                       # [Bb,nC,c,H]
+
+    # ---- intra-chunk: decay-masked attention-like matmul ----
+    # L[t,s] = exp(cum[t] - cum[s] + la[s]... ) for s <= t; standard SSD uses
+    # decay from s (inclusive of step s's dt B u) to t: exp(cum[t]-cum[s]).
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # [Bb,nC,c,c,H]
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bntk,bnsk->bnts", C_, B_)              # [Bb,nC,c,c]
+    scores = scores[..., None] * L                              # [Bb,nC,c,c,H]
+    du = dt_[..., None] * u_                                    # [Bb,nC,c,H,P]
+    y_local = jnp.einsum("bntsh,bnshp->bnthp", scores, du)
+
+    # ---- chunk states and cross-chunk carry ----
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)             # [Bb,nC,c,H]
+    state_contrib = jnp.einsum("bnsk,bnshp->bnkhp",
+                               B_, du * decay_to_end[..., None])  # [Bb,nC,N,H,P]
+    chunk_decay = jnp.exp(cum[:, :, -1])                        # [Bb,nC,H]
+
+    def cross(carry, inp):
+        st, dec = inp                                           # [Bb,N,H,P],[Bb,H]
+        prev = carry
+        new = prev * dec[:, None, :, None] + st
+        return new, prev
+
+    init = jnp.zeros((Bb, N, H, P), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        cross, init,
+        (state_contrib.swapaxes(0, 1).astype(jnp.float32),
+         chunk_decay.swapaxes(0, 1).astype(jnp.float32)))
+    prev_states = prev_states.swapaxes(0, 1)                    # [Bb,nC,N,H,P]
+
+    carry_decay = jnp.exp(cum)                                  # decay from chunk start
+    y_carry = jnp.einsum("bntk,bnkhp->bnthp",
+                         C_, prev_states.astype(C_.dtype))
+    y = y_local + y_carry * carry_decay[..., None]
+    return y.reshape(Bb, S, H, P)
+
+
+def ssm_forward(p, x, cfg: ArchConfig):
+    """Full-sequence SSM block. x: [B,S,d_model] -> [B,S,d_model]."""
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    H, P = _heads_for(d_inner)
+    N = ssm.state_dim
+    xz = x @ p["w_in"].astype(x.dtype)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u = silu(_causal_conv(u, p["conv_w"].astype(x.dtype)))
+    bc = u @ p["w_bc"].astype(x.dtype)
+    B = bc[..., :N].astype(jnp.float32)
+    C = bc[..., N:].astype(jnp.float32)
+    dt = jax.nn.softplus((u @ p["w_dt"].astype(x.dtype)).astype(jnp.float32)
+                         + p["dt_bias"][None, None])            # [B,S,H]
+    a = -jnp.exp(p["a_log"])                                    # [H] < 0
+    uh = u.reshape(*u.shape[:-1], H, P).astype(jnp.float32)
+    y = ssd_scan(uh, dt, a, B, C, ssm.chunk)
+    y = y.reshape(*x.shape[:-1], d_inner).astype(x.dtype)
+    y = y + u * p["d_skip"].astype(x.dtype)[None, None]
+    y = y * silu(z)
+    return y @ p["w_out"].astype(x.dtype)
+
+
+# ----------------------------------------------------------------- decode step
+def init_ssm_cache(cfg: ArchConfig, batch: int, layers: int):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    H, P = _heads_for(d_inner)
+    return {
+        "state": jnp.zeros((layers, batch, ssm.state_dim, H, P), jnp.float32),
+        "conv": jnp.zeros((layers, batch, ssm.conv_kernel - 1, d_inner),
+                          jnp.bfloat16),
+    }
+
+
+def ssm_decode_step(p, x, cfg: ArchConfig, state, conv_buf):
+    """One-token step.  x: [B,1,d_model]; state: [B,N,H,P];
+    conv_buf: [B,K-1,d_inner].  Returns (y, new_state, new_conv)."""
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    H, P = _heads_for(d_inner)
+    N = ssm.state_dim
+    xz = x @ p["w_in"].astype(x.dtype)
+    u, z = jnp.split(xz, 2, axis=-1)                            # [B,1,d_inner]
+    window = jnp.concatenate([conv_buf.astype(u.dtype), u], axis=1)
+    u_c = silu(jnp.einsum("bkd,kd->bd", window,
+                          p["conv_w"].astype(u.dtype)))[:, None, :]
+    new_conv = window[:, 1:, :].astype(conv_buf.dtype)
+    bc = u_c @ p["w_bc"].astype(x.dtype)
+    B = bc[:, 0, :N].astype(jnp.float32)                        # [B,N]
+    C = bc[:, 0, N:].astype(jnp.float32)
+    dt = jax.nn.softplus((u_c @ p["w_dt"].astype(x.dtype)).astype(jnp.float32)
+                         + p["dt_bias"][None, None])[:, 0]      # [B,H]
+    a = -jnp.exp(p["a_log"])
+    dec = jnp.exp(dt * a[None])                                 # [B,H]
+    uh = u_c[:, 0].reshape(-1, H, P).astype(jnp.float32)        # [B,H,P]
+    du = dt[..., None] * uh
+    new_state = state * dec[:, None, :, None] \
+        + jnp.einsum("bk,bhp->bkhp", B, du)
+    y = jnp.einsum("bk,bkhp->bhp", C, new_state)                # [B,H,P]
+    y = y.reshape(-1, 1, d_inner).astype(x.dtype)
+    y = y + u_c * p["d_skip"].astype(x.dtype)[None, None]
+    y = y * silu(z)
+    return y @ p["w_out"].astype(x.dtype), new_state, new_conv

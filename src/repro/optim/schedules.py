@@ -1,0 +1,30 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, MiniCPM arXiv:2404.06395).
+
+WSD is the schedule minicpm-2b was trained with; it is the default for that
+arch in launch/train.py.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup_steps: int,
+                    total_steps: int, final_frac: float = 0.1):
+    t = step.astype(jnp.float32)
+    warm = t / jnp.maximum(1.0, warmup_steps)
+    prog = jnp.clip((t - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps), 0, 1)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(t < warmup_steps, warm, cos)
+
+
+def wsd_schedule(step, *, peak_lr: float, warmup_steps: int,
+                 stable_steps: int, decay_steps: int,
+                 final_frac: float = 0.01):
+    """Warmup -> Stable (constant) -> Decay (exponential-ish linear)."""
+    t = step.astype(jnp.float32)
+    warm = t / jnp.maximum(1.0, warmup_steps)
+    in_decay = t - (warmup_steps + stable_steps)
+    decay = final_frac ** jnp.clip(in_decay / jnp.maximum(1.0, decay_steps), 0, 1)
+    lr = jnp.where(t < warmup_steps, warm,
+                   jnp.where(in_decay < 0, 1.0, decay))
+    return peak_lr * lr

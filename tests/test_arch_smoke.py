@@ -1,0 +1,160 @@
+"""Per-architecture smoke tests: reduced configs, one forward + train-grad +
+decode step on CPU; asserts shapes and finiteness (no NaNs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch
+from repro.models import api
+from repro.models.frontends import synthetic_frontend
+
+BATCH, SEQ = 2, 32
+
+
+def _inputs(cfg, batch=BATCH, seq=SEQ, seed=0):
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+    targets = jnp.roll(tokens, -1, axis=1)
+    frontend = synthetic_frontend(cfg, batch)
+    return tokens, targets, frontend
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_forward_shapes_and_finiteness(name):
+    cfg = get_arch(name).smoke()
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    tokens, _, frontend = _inputs(cfg)
+    logits = api.forward(params, tokens, cfg, frontend)
+    S_out = SEQ + (cfg.frontend_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (BATCH, S_out, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{name}: non-finite logits"
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_train_step_grad_finite(name):
+    cfg = get_arch(name).smoke()
+    params = api.init_params(jax.random.PRNGKey(1), cfg)
+    tokens, targets, frontend = _inputs(cfg)
+
+    def loss(p):
+        return api.loss_fn(p, tokens, targets, cfg, frontend)
+
+    val, grads = jax.value_and_grad(loss)(params)
+    assert bool(jnp.isfinite(val)), f"{name}: non-finite loss {val}"
+    leaves = jax.tree.leaves(grads)
+    assert leaves, "no grads"
+    for g in leaves:
+        assert bool(jnp.isfinite(g).all()), f"{name}: non-finite grad"
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_decode_step(name):
+    cfg = get_arch(name).smoke()
+    if not cfg.supports_decode:
+        pytest.skip("no decode step for this arch")
+    params = api.init_params(jax.random.PRNGKey(2), cfg)
+    cache = api.init_cache(cfg, BATCH, max_len=64)
+    tok = jnp.zeros((BATCH, 1), jnp.int32)
+    logits, cache = api.decode_step(params, tok, cache, cfg)
+    assert logits.shape == (BATCH, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    logits2, cache = api.decode_step(params, tok, cache, cfg)
+    assert bool(jnp.isfinite(logits2).all())
+    assert int(cache["pos"][0]) == 2
+
+
+def test_decode_matches_forward_dense():
+    """Greedy decode logits must match teacher-forced forward logits."""
+    cfg = get_arch("smollm-135m").smoke()
+    params = api.init_params(jax.random.PRNGKey(3), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (1, 8), 0,
+                                cfg.vocab_size)
+    full = api.forward(params, tokens, cfg)
+    cache = api.init_cache(cfg, 1, max_len=16)
+    outs = []
+    for t in range(8):
+        lg, cache = api.decode_step(params, tokens[:, t:t + 1], cache, cfg)
+        outs.append(lg[:, 0])
+    step = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_decode_matches_forward_sliding_window():
+    cfg = get_arch("gemma2-2b").smoke().replace(sliding_window=4,
+                                                local_global_pattern=True)
+    params = api.init_params(jax.random.PRNGKey(5), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(6), (1, 12), 0,
+                                cfg.vocab_size)
+    full = api.forward(params, tokens, cfg)
+    cache = api.init_cache(cfg, 1, max_len=16)
+    outs = []
+    for t in range(12):
+        lg, cache = api.decode_step(params, tokens[:, t:t + 1], cache, cfg)
+        outs.append(lg[:, 0])
+    step = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_decode_matches_forward_ssm():
+    """Chunked SSD scan (forward) vs step recurrence (decode) consistency."""
+    cfg = get_arch("xlstm-1.3b").smoke()
+    params = api.init_params(jax.random.PRNGKey(7), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(8), (1, 8), 0,
+                                cfg.vocab_size)
+    full = api.forward(params, tokens, cfg)
+    cache = api.init_cache(cfg, 1, max_len=16)
+    outs = []
+    for t in range(8):
+        lg, cache = api.decode_step(params, tokens[:, t:t + 1], cache, cfg)
+        outs.append(lg[:, 0])
+    step = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_decode_matches_forward_hybrid():
+    cfg = get_arch("hymba-1.5b").smoke().replace(sliding_window=0)
+    params = api.init_params(jax.random.PRNGKey(9), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(10), (1, 8), 0,
+                                cfg.vocab_size)
+    full = api.forward(params, tokens, cfg)
+    cache = api.init_cache(cfg, 1, max_len=16)
+    outs = []
+    for t in range(8):
+        lg, cache = api.decode_step(params, tokens[:, t:t + 1], cache, cfg)
+        outs.append(lg[:, 0])
+    step = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_moe_routing_actually_sparse():
+    """Only top-k experts may contribute: zeroing unused experts' weights
+    must not change the output."""
+    cfg = get_arch("qwen3-moe-30b-a3b").smoke()
+    from repro.models.moe import _route, init_moe, moe_dense
+    key = jax.random.PRNGKey(11)
+    p = init_moe(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(12), (1, 4, cfg.d_model))
+    w, idx = _route(p, x, cfg.moe)
+    used = np.unique(np.asarray(idx))
+    out = moe_dense(p, x, cfg)
+    p2 = dict(p)
+    E = p["router"].shape[-1]
+    mask = jnp.zeros((E,), bool).at[jnp.asarray(used)].set(True)
+    for k in ("w_gate", "w_up", "w_down"):
+        p2[k] = jnp.where(mask[:, None, None], p[k], 0.0)
+    out2 = moe_dense(p2, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gemma2_softcap_applied():
+    cfg = get_arch("gemma2-2b").smoke()
+    params = api.init_params(jax.random.PRNGKey(13), cfg)
+    tokens, _, _ = _inputs(cfg)
+    logits = api.forward(params, tokens, cfg)
+    assert float(jnp.abs(logits).max()) <= cfg.logit_softcap + 1e-3

@@ -1,0 +1,326 @@
+"""Core engine behaviour: OmniSim vs the cycle-stepped RTL oracle."""
+import pytest
+
+from repro.core import (LightningSim, Program, Read, ReadNB, Write, WriteNB,
+                        Delay, Emit, Empty, Full, UnsupportedDesignError,
+                        simulate, simulate_rtl)
+
+
+def _pc(n=16, depth=2, consumer_delay=0):
+    prog = Program("pc", declared_type="A")
+    data = prog.fifo("data", depth)
+
+    @prog.module("producer")
+    def producer():
+        for i in range(1, n + 1):
+            yield Write(data, i)
+
+    @prog.module("consumer")
+    def consumer():
+        total = 0
+        for _ in range(n):
+            total += (yield Read(data))
+            if consumer_delay:
+                yield Delay(consumer_delay)
+        yield Emit("sum", total)
+
+    return prog
+
+
+def test_basic_producer_consumer_matches_oracle():
+    r1 = simulate(_pc())
+    r2 = simulate_rtl(_pc())
+    assert r1.outputs == r2.outputs
+    assert r1.cycles == r2.cycles
+    assert r1.outputs["sum"] == 16 * 17 // 2
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3, 7, 100])
+@pytest.mark.parametrize("delay", [0, 1, 3])
+def test_depth_delay_sweep_matches_oracle(depth, delay):
+    r1 = simulate(_pc(depth=depth, consumer_delay=delay))
+    r2 = simulate_rtl(_pc(depth=depth, consumer_delay=delay))
+    assert r1.outputs == r2.outputs
+    assert r1.cycles == r2.cycles
+
+
+def test_blocking_write_stalls_on_full_fifo():
+    """depth=1 + slow consumer: writes must serialize behind reads."""
+    r_fast = simulate(_pc(depth=100, consumer_delay=2))
+    r_slow = simulate(_pc(depth=1, consumer_delay=2))
+    assert r_slow.cycles >= r_fast.cycles
+    assert r_slow.outputs == r_fast.outputs
+
+
+def test_nb_write_drop_semantics():
+    prog = Program("nbdrop", declared_type="C")
+    f = prog.fifo("f", 1)
+
+    @prog.module("p")
+    def p():
+        sent = 0
+        for i in range(10):
+            ok = yield WriteNB(f, i)
+            if ok:
+                sent += 1
+        yield Emit("sent", sent)
+
+    @prog.module("c")
+    def c():
+        got = []
+        for _ in range(3):
+            v = yield Read(f)
+            got.append(v)
+            yield Delay(2)
+        yield Emit("got", tuple(got))
+
+    r1 = simulate(prog)
+    prog2 = Program("nbdrop", declared_type="C")
+    # rebuild (generators are single-use)
+    r2 = simulate_rtl(_rebuild_nbdrop())
+    assert r1.outputs == r2.outputs
+    assert r1.cycles == r2.cycles
+    assert r1.outputs["sent"] >= 3           # at least what the consumer got
+
+
+def _rebuild_nbdrop():
+    prog = Program("nbdrop", declared_type="C")
+    f = prog.fifo("f", 1)
+
+    @prog.module("p")
+    def p():
+        sent = 0
+        for i in range(10):
+            ok = yield WriteNB(f, i)
+            if ok:
+                sent += 1
+        yield Emit("sent", sent)
+
+    @prog.module("c")
+    def c():
+        got = []
+        for _ in range(3):
+            v = yield Read(f)
+            got.append(v)
+            yield Delay(2)
+        yield Emit("got", tuple(got))
+
+    return prog
+
+
+def test_nb_read_polling():
+    def build():
+        prog = Program("poll", declared_type="B")
+        f = prog.fifo("f", 2)
+
+        @prog.module("p")
+        def p():
+            yield Delay(10)
+            yield Write(f, 42)
+
+        @prog.module("c")
+        def c():
+            polls = 0
+            while True:
+                ok, v = yield ReadNB(f)
+                polls += 1
+                if ok:
+                    break
+            yield Emit("polls", polls)
+            yield Emit("v", v)
+
+        return prog
+
+    r1 = simulate(build())
+    r2 = simulate_rtl(build())
+    assert r1.outputs == r2.outputs == {"polls": 12, "v": 42}
+    assert r1.cycles == r2.cycles
+
+
+def test_empty_full_probes():
+    def build():
+        prog = Program("probe", declared_type="C")
+        f = prog.fifo("f", 2)
+
+        @prog.module("p")
+        def p():
+            outcomes = []
+            for i in range(6):
+                full = yield Full(f)
+                outcomes.append(full)
+                if not full:
+                    yield Write(f, i)
+            yield Emit("full_seq", tuple(outcomes))
+
+        @prog.module("c")
+        def c():
+            got = 0
+            for _ in range(3):
+                v = yield Read(f)
+                got += 1
+                yield Delay(5)
+            yield Emit("got", got)
+
+        return prog
+
+    r1 = simulate(build())
+    r2 = simulate_rtl(build())
+    assert r1.outputs == r2.outputs
+    assert r1.cycles == r2.cycles
+
+
+def test_deadlock_detected_not_hang():
+    def build():
+        prog = Program("dl", declared_type="B")
+        ab = prog.fifo("ab", 1)
+        ba = prog.fifo("ba", 1)
+
+        @prog.module("a")
+        def a():
+            v = yield Read(ba)
+            yield Write(ab, v)
+
+        @prog.module("b")
+        def b():
+            v = yield Read(ab)
+            yield Write(ba, v)
+
+        return prog
+
+    r1 = simulate(build())
+    assert r1.deadlock
+    assert set(r1.outputs["__deadlock__"]) == {"a", "b"}
+    r2 = simulate_rtl(build())
+    assert r2.deadlock
+
+
+def test_deadlock_from_undersized_fifo():
+    """Cyclic design that only deadlocks when the FIFO is too small."""
+    def build(depth):
+        prog = Program("dl2", declared_type="B")
+        req = prog.fifo("req", depth)
+        resp = prog.fifo("resp", 2)
+
+        @prog.module("ctrl")
+        def ctrl():
+            total = 0
+            # sends a burst of 3 before draining any response
+            for i in range(3):
+                yield Write(req, i)
+            for i in range(3):
+                total += (yield Read(resp))
+            yield Emit("total", total)
+
+        @prog.module("proc")
+        def proc():
+            for _ in range(3):
+                v = yield Read(req)
+                yield Write(resp, v * 10)
+
+        return prog
+
+    ok = simulate(build(3))
+    assert not ok.deadlock and ok.outputs["total"] == 30
+    # depth=2 still fine: proc drains as ctrl writes
+    ok2 = simulate(build(2))
+    assert not ok2.deadlock
+    rtl = simulate_rtl(build(3))
+    assert ok.cycles == rtl.cycles
+
+
+def test_forced_earliest_query_rule():
+    """Two pollers whose targets are mutually unknown: the earliest pending
+    query must resolve false, guaranteeing forward progress."""
+    def build():
+        prog = Program("mutual_poll", declared_type="C")
+        ab = prog.fifo("ab", 1)
+        ba = prog.fifo("ba", 1)
+
+        @prog.module("a")
+        def a():
+            sent = False
+            while True:
+                ok, _ = yield ReadNB(ba)
+                if ok:
+                    break
+                if not sent:
+                    yield WriteNB(ab, 1)
+                    sent = True
+            yield Emit("a_done", True)
+
+        @prog.module("b")
+        def b():
+            while True:
+                ok, _ = yield ReadNB(ab)
+                if ok:
+                    break
+            yield WriteNB(ba, 2)
+            yield Emit("b_done", True)
+
+        return prog
+
+    r1 = simulate(build())
+    r2 = simulate_rtl(build())
+    assert r1.outputs == r2.outputs == {"a_done": True, "b_done": True}
+    assert r1.cycles == r2.cycles
+    assert r1.stats.queries_forced_false >= 1
+
+
+def test_finalization_matches_eager_times():
+    # _finish asserts longest-path == eager times internally; just run a
+    # design with heavy stalling to exercise it.
+    r = simulate(_pc(n=64, depth=1, consumer_delay=3))
+    assert r.cycles > 64
+
+
+def test_shuffle_schedule_independence():
+    base = simulate(_pc(n=32, depth=2, consumer_delay=1))
+    for seed in range(8):
+        r = simulate(_pc(n=32, depth=2, consumer_delay=1), shuffle_seed=seed)
+        assert r.outputs == base.outputs
+        assert r.cycles == base.cycles
+
+
+def test_lightningsim_rejects_nb():
+    prog = Program("nb", declared_type="C")
+    f = prog.fifo("f", 2)
+
+    @prog.module("p")
+    def p():
+        yield WriteNB(f, 1)
+
+    @prog.module("c")
+    def c():
+        yield ReadNB(f)
+
+    with pytest.raises(UnsupportedDesignError):
+        LightningSim(prog).run()
+
+
+def test_dead_probe_elimination():
+    def build(used):
+        prog = Program("deadprobe", declared_type="C")
+        f = prog.fifo("f", 2)
+
+        @prog.module("p")
+        def p():
+            for i in range(4):
+                yield Full(f, used=used)     # result discarded when unused
+                yield Write(f, i)
+
+        @prog.module("c")
+        def c():
+            total = 0
+            for _ in range(4):
+                total += (yield Read(f))
+            yield Emit("total", total)
+
+        return prog
+
+    r_used = simulate(build(True))
+    r_dead = simulate(build(False))
+    # same timing and outputs, but no queries issued for the dead probes
+    assert r_used.outputs == r_dead.outputs
+    assert r_used.cycles == r_dead.cycles
+    assert r_dead.stats.skipped_probes == 4
+    assert r_dead.stats.queries < r_used.stats.queries

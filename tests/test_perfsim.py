@@ -1,0 +1,75 @@
+"""perfsim: OmniSim as distributed-schedule simulator."""
+import dataclasses
+
+import pytest
+
+from repro.perfsim.pipeline import (PipelineSpec, buffer_depth_dse,
+                                    build_pipeline_program, simulate_pipeline)
+from repro.core import simulate, simulate_rtl, classify
+
+
+def test_pipeline_program_matches_rtl_oracle():
+    spec = PipelineSpec(stages=4, microbatches=8, fwd_ticks=5, bwd_ticks=10,
+                        buffer_depth=2)
+    r1 = simulate(build_pipeline_program(spec))
+    r2 = simulate_rtl(build_pipeline_program(spec))
+    assert r1.cycles == r2.cycles
+    assert r1.outputs == r2.outputs
+    assert not r1.deadlock
+
+
+@pytest.mark.parametrize("schedule", ["gpipe", "1f1b"])
+def test_schedules_complete(schedule):
+    spec = PipelineSpec(stages=4, microbatches=16, fwd_ticks=3, bwd_ticks=6,
+                        schedule=schedule, dp_allreduce_ticks=20)
+    out = simulate_pipeline(spec)
+    assert not out.deadlock
+    # lower bound: every microbatch's fwd+bwd through one stage
+    assert out.step_ticks >= 16 * 9
+
+
+def test_1f1b_beats_gpipe_with_small_buffers():
+    """1F1B's early backwards drain buffers: with tight activation queues it
+    stalls less than GPipe (the reason 1F1B exists)."""
+    kw = dict(stages=4, microbatches=16, fwd_ticks=5, bwd_ticks=10,
+              buffer_depth=1)
+    g = simulate_pipeline(PipelineSpec(schedule="gpipe", **kw))
+    f = simulate_pipeline(PipelineSpec(schedule="1f1b", **kw))
+    assert not g.deadlock and not f.deadlock
+    assert f.step_ticks <= g.step_ticks
+
+
+def test_more_microbatches_lower_bubble():
+    base = dict(stages=4, fwd_ticks=5, bwd_ticks=10, buffer_depth=2)
+    small = simulate_pipeline(PipelineSpec(microbatches=4, **base))
+    large = simulate_pipeline(PipelineSpec(microbatches=32, **base))
+    assert large.bubble_fraction < small.bubble_fraction
+
+
+def test_deeper_buffers_never_slower():
+    base = dict(stages=4, microbatches=12, fwd_ticks=4, bwd_ticks=8,
+                schedule="gpipe")
+    prev = None
+    for d in (1, 2, 4, 8):
+        r = simulate_pipeline(PipelineSpec(buffer_depth=d, **base))
+        if prev is not None:
+            assert r.step_ticks <= prev
+        prev = r.step_ticks
+
+
+def test_buffer_dse_incremental_matches_full():
+    """Depth sweep via incremental re-sim must agree with full re-sims."""
+    spec = PipelineSpec(stages=4, microbatches=8, fwd_ticks=5, bwd_ticks=10,
+                        schedule="gpipe", buffer_depth=1)
+    sweep = buffer_depth_dse(spec, [1, 2, 4, 16])
+    for depth, res, incr_s in sweep:
+        full = simulate_pipeline(
+            dataclasses.replace(spec, buffer_depth=depth))
+        assert res.step_ticks == full.step_ticks, depth
+
+
+def test_pipeline_program_is_type_b():
+    spec = PipelineSpec(stages=3, microbatches=4, fwd_ticks=2, bwd_ticks=4)
+    prog = build_pipeline_program(spec)
+    c = classify(prog, simulate(build_pipeline_program(spec)))
+    assert c.cyclic          # fwd/bwd queues form stage cycles

@@ -1,0 +1,38 @@
+"""Dynamic B-vs-C divergence validation (semantic taxonomy boundary)."""
+import pytest
+
+from repro.core import classify_dynamic
+from repro.designs.paper import (fig4_ex2, fig4_ex3, fig4_ex4a, fig4_ex4b,
+                                 fig4_ex5, fig2_timer)
+from repro.designs.typea import producer_consumer
+
+
+def test_type_a_stays_a():
+    c = classify_dynamic(lambda: producer_consumer(n=32))
+    assert c.dtype == "A"
+
+
+def test_type_b_no_divergence():
+    # fig4_ex2: NB outcomes never alter the written sequence
+    c = classify_dynamic(lambda: fig4_ex2(n=64))
+    assert c.dtype == "B", c
+    # fig4_ex3: blocking-only cyclic
+    c = classify_dynamic(lambda: fig4_ex3(n=64))
+    assert c.dtype == "B", c
+
+
+def test_timer_no_witness_falls_back_to_declared():
+    """fig2_timer's outputs are depth-invariant (the witness probe cannot
+    see its cycle-dependence); the declared Type C must stand."""
+    c = classify_dynamic(lambda: fig2_timer(n=64))
+    assert c.dtype == "C" and c.declared == "C"
+
+
+@pytest.mark.parametrize("builder", [
+    lambda: fig4_ex4a(n=128),
+    lambda: fig4_ex4b(n=128),
+    lambda: fig4_ex5(n=128),
+])
+def test_type_c_divergence_detected(builder):
+    c = classify_dynamic(builder)
+    assert c.dtype == "C", c

@@ -2,25 +2,40 @@
 
     PYTHONPATH=src python -m benchmarks.run
 
-Prints human-readable tables followed by ``name,us_per_call,derived`` CSV.
+Prints human-readable tables followed by ``name,us_per_call,derived`` CSV,
+and writes the core-engine perf numbers (us/config for looped vs batched
+incremental re-simulation) to ``BENCH_core.json`` so future PRs have a
+machine-readable trajectory to compare against.
 """
 from __future__ import annotations
 
+import json
+import os
+
 
 def main() -> None:
+    from benchmarks import tables
     from benchmarks.tables import (fig8_perfsim, fig8_speed_scaling,
                                    pipeline_table, table3_funcsim,
-                                   table5_vs_decoupled, table6_incremental)
+                                   table5_vs_decoupled, table6_batch_dse,
+                                   table6_incremental)
     rows = []
     rows += table3_funcsim()
     rows += fig8_perfsim()
     rows += fig8_speed_scaling()
     rows += table5_vs_decoupled()
     rows += table6_incremental()
+    rows += table6_batch_dse()
     rows += pipeline_table()
     print("\n== CSV (name,us_per_call,derived) ==")
     for r in rows:
         print(r)
+    out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_core.json")
+    with open(out, "w") as f:
+        json.dump(tables.BENCH_CORE, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"\nwrote {out}")
 
 
 if __name__ == "__main__":

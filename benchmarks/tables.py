@@ -10,8 +10,13 @@ import time
 from typing import Dict, List, Tuple
 
 from repro.core import (LightningSim, UnsupportedDesignError, csim,
-                        resimulate, simulate, simulate_rtl)
+                        resimulate, resimulate_batch, simulate, simulate_rtl)
 from repro.designs import PAPER_DESIGNS, TYPEA_DESIGNS
+
+# machine-readable core-perf numbers, filled by the benchmarks below and
+# dumped to BENCH_core.json by benchmarks/run.py so future PRs have a
+# trajectory to compare against
+BENCH_CORE: Dict[str, float] = {}
 
 
 def _timeit(fn, repeats: int = 1):
@@ -125,6 +130,48 @@ def table6_incremental() -> List[str]:
               f"{t_inc*1e3:.2f} ms ({spd:.0f}x vs full)")
         rows.append(f"table6/depths_{depths[0]}_{depths[1]},{t_inc*1e6:.0f},"
                     f"ok={inc.ok};cycles={inc.result.cycles};speedup={spd:.0f}")
+    return rows
+
+
+# ------------------------------------------------------- Table 6 extension
+def table6_batch_dse() -> List[str]:
+    """Depth-batched DSE: K configs per resimulate_batch call vs a Python
+    loop of resimulate() calls (the core/dse.py throughput engine)."""
+    import numpy as np
+
+    from repro.designs.typea import skynet_like
+    rows = []
+    print("\n== Table 6 (batch): depth-batched DSE on skynet_like ==")
+    builder = lambda: skynet_like(items=512, depth=12)
+    base, t_full = _timeit(lambda: simulate(builder()))
+    rng = np.random.default_rng(0)
+    K = 256
+    D = rng.integers(4, 17, size=(K, len(base.depths)))
+    resimulate(base, tuple(int(d) for d in D[0]))          # warm the cache
+    resimulate_batch(base, D[:2])
+    t0 = time.perf_counter()
+    for row in D:
+        resimulate(base, tuple(int(d) for d in row), fallback=False)
+    t_loop = time.perf_counter() - t0
+    out, t_batch = _timeit(lambda: resimulate_batch(base, D, fallback=False))
+    spd = t_loop / t_batch
+    us_loop = t_loop / K * 1e6
+    us_batch = t_batch / K * 1e6
+    print(f"{K} configs: looped {t_loop*1e3:7.1f} ms ({us_loop:6.0f} us/cfg)"
+          f"  batched {t_batch*1e3:6.1f} ms ({us_batch:5.0f} us/cfg)"
+          f"  speedup {spd:5.1f}x  reused {out.n_reused}/{K}")
+    print(f"vs full re-simulation per config: "
+          f"{t_full / (t_batch / K):,.0f}x")
+    rows.append(f"table6_batch/skynet_like_K{K},{us_batch:.1f},"
+                f"speedup_vs_loop={spd:.1f};reused={out.n_reused}")
+    BENCH_CORE.update({
+        "full_sim_us": t_full * 1e6,
+        "looped_resimulate_us_per_config": us_loop,
+        "batched_resimulate_us_per_config": us_batch,
+        "batch_speedup_vs_loop": spd,
+        "batch_K": K,
+        "batch_reused": out.n_reused,
+    })
     return rows
 
 

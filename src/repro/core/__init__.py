@@ -12,7 +12,9 @@ from .events import (Constraint, DeadlockError, NodeKind, Query, RequestType,
                      SimStats, UnsupportedDesignError)
 from .graph import (SimGraph, level_schedule, longest_path_numpy,
                     longest_path_python, to_dense_blocks)
-from .incremental import IncrementalOutcome, resimulate
+from .dse import BatchOutcome, resimulate_batch
+from .incremental import (CompiledGraph, IncrementalOutcome, compile_graph,
+                          resimulate)
 from .lightningsim import CSimCrash, LightningSim, csim
 from .program import (Delay, Emit, Empty, Fifo, Full, Module, Op, Program,
                       Read, ReadNB, SimResult, Write, WriteNB)
@@ -21,7 +23,8 @@ from .taxonomy import Classification, classify, classify_dynamic
 
 __all__ = [
     "OmniSim", "simulate", "simulate_rtl", "LightningSim", "csim",
-    "resimulate", "classify", "Classification", "IncrementalOutcome",
+    "resimulate", "resimulate_batch", "BatchOutcome", "CompiledGraph",
+    "compile_graph", "classify", "Classification", "IncrementalOutcome",
     "Program", "Fifo", "Module", "Op", "Read", "Write", "ReadNB", "WriteNB",
     "Empty", "Full", "Delay", "Emit", "SimResult", "SimGraph",
     "longest_path_numpy", "longest_path_python", "level_schedule",

@@ -1,0 +1,638 @@
+"""Depth-batched design-space exploration: K re-simulations in one pass.
+
+The paper's Table 6 capability — re-evaluating a finished run under new
+FIFO depths in microseconds — turned into a *throughput* engine.  FIFO
+sizing spaces are 10^3–10^5 configurations; evaluating them one
+``resimulate()`` call at a time serializes Python and numpy call overhead.
+``resimulate_batch`` instead treats the K candidate depth vectors as a
+leading batch axis over the whole incremental pipeline (the
+compile-once/re-solve-many structure of LightningSimV2, arXiv 2404.09471,
+lifted to a batch of solves):
+
+  1. regenerate the depth-dependent WAR edges for ALL K configs as stacked
+     index/mask arrays (the static SEQ+RAW skeleton is shared via
+     :class:`~repro.core.incremental.CompiledGraph`, and per-(FIFO, depth)
+     columns are cached — depth values repeat heavily across a sweep);
+  2. run the chain-decomposed longest-path fixpoint with a leading batch
+     axis — one ``np.maximum.accumulate`` per module chain over the whole
+     batch instead of K Python loops.  The production solver seeds every
+     config with the depth-INDEPENDENT no-WAR fixpoint (computed once at
+     compile time) and Gauss-Seidel-sweeps chains in module order with
+     dirty tracking, so a config only pays for the part of the pipeline its
+     WAR constraints actually move — slack configs converge with zero
+     sweeps;
+  3. re-check every stored NB/probe constraint for all K configs in one
+     vectorized pass;
+  4. mask out structurally-infeasible configs (a committed blocking write
+     whose target read never occurred ⇒ deadlock), cyclic configs (the
+     regenerated event order is invalid) and constraint-violating configs,
+     and fall back to a full re-simulation for exactly that subset.
+
+Backends: ``"numpy"`` (default, above), ``"reference"`` (the synchronous
+Jacobi :func:`~repro.core.graph.longest_path_chains_batched` — the oracle
+the production solver is tested against), and ``"jax"`` — a ``jax.vmap``
+lowering of the dense max-plus fixpoint onto the existing
+``repro.kernels.maxplus`` Pallas kernel for device-resident sweeps of
+small graphs.
+"""
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .engine import OmniSim, simulate
+from .graph import longest_path_chains, longest_path_chains_batched
+from .incremental import NEGI, CompiledGraph, compile_graph
+from .program import SimResult
+
+# per-config status codes
+REUSED, DEADLOCK, CYCLE, VIOLATED = 0, 1, 2, 3
+
+_STATUS_REASON = {
+    REUSED: "constraints satisfied",
+    CYCLE: "regenerated WAR edges create a cycle (event order invalid)",
+}
+
+
+@dataclass
+class _BatchArrays:
+    """Chain-major-permuted view of a CompiledGraph for batched solving."""
+
+    perm: np.ndarray               # new pos -> original node idx
+    inv: np.ndarray                # original node idx -> new pos
+    slices: List[tuple]            # contiguous (lo, hi) per module chain
+    starts: np.ndarray             # chain start offsets (for chain-of-node)
+    cw: np.ndarray                 # cumulative SEQ weight, chain-major
+    base_p: np.ndarray             # base contribution, chain-major (NEGI=none)
+    raw_dst: np.ndarray            # RAW edges, chain-major columns
+    raw_src: np.ndarray
+    raw_w: np.ndarray
+    raw_buckets: dict              # src chain -> [(dst chain, src, dst, w)]
+    fifo_w_cols: List[np.ndarray]  # per FIFO: write node columns
+    fifo_r_cols: List[np.ndarray]  # per FIFO: read node columns
+    fifo_blocking: List[np.ndarray]
+    fifo_need: np.ndarray          # min depth to avoid structural deadlock
+    fifo_rchain: np.ndarray        # per FIFO: reader module chain (-1 = none)
+    fifo_wchain: np.ndarray        # per FIFO: writer module chain (-1 = none)
+    c_src_p: np.ndarray            # constraint source nodes, chain-major
+    bound: int                     # upper bound on any acyclic path length
+    t_inf: np.ndarray = None       # no-WAR (infinite-depth) fixpoint times
+    c_inf: np.ndarray = None       # ... and its contribution vector
+    war_cache: Dict[tuple, tuple] = field(default_factory=dict)
+
+
+def _chain_of(starts: np.ndarray, col: int) -> int:
+    return int(np.searchsorted(starts, col, side="right") - 1)
+
+
+def _batch_arrays(cache: CompiledGraph) -> _BatchArrays:
+    if cache.batch is not None:
+        return cache.batch
+    n = cache.n
+    perm = (np.concatenate(cache.chains) if cache.chains
+            else np.zeros(0, np.int64))
+    assert len(perm) == n, "every node must belong to exactly one chain"
+    inv = np.empty(n, dtype=np.int64)
+    inv[perm] = np.arange(n, dtype=np.int64)
+    slices, cw_parts, off = [], [], 0
+    for ch in cache.chains:
+        slices.append((off, off + len(ch)))
+        cw_parts.append(np.cumsum(cache.seq_w[ch]))
+        off += len(ch)
+    cw = np.concatenate(cw_parts) if cw_parts else np.zeros(0, np.int64)
+    starts = np.asarray([lo for (lo, _) in slices] or [0], np.int64)
+    raw_dst = inv[cache.raw_dst]
+    raw_src = inv[cache.raw_src]
+    # the unique-destination invariant the batched scatter-max relies on:
+    # one RAW in-edge per read node, one WAR in-edge per write node, and
+    # read/write node sets are disjoint (engine construction guarantees it)
+    assert len(np.unique(raw_dst)) == len(raw_dst), \
+        "RAW destinations must be unique for the batched fixpoint"
+    # bucket RAW edges by (src chain, dst chain) for the Gauss-Seidel sweep
+    raw_buckets: dict = {}
+    if len(raw_dst):
+        sc = np.searchsorted(starts, raw_src, side="right") - 1
+        dc = np.searchsorted(starts, raw_dst, side="right") - 1
+        order = np.lexsort((dc, sc))
+        s_s, d_s = sc[order], dc[order]
+        cut = np.flatnonzero(np.diff(s_s) | np.diff(d_s))
+        bounds = np.concatenate([[0], cut + 1, [len(order)]])
+        for a, b in zip(bounds[:-1], bounds[1:]):
+            idx = order[a:b]
+            raw_buckets.setdefault(int(s_s[a]), []).append(
+                (int(d_s[a]), raw_src[idx], raw_dst[idx], cache.raw_w[idx]))
+    w_cols, r_cols, blocking, need, rchain, wchain = [], [], [], [], [], []
+    for (w_nodes, r_nodes, blk) in cache.fifos:
+        wc = inv[w_nodes] if len(w_nodes) else w_nodes
+        rc = inv[r_nodes] if len(r_nodes) else r_nodes
+        w_cols.append(wc)
+        r_cols.append(rc)
+        blocking.append(blk)
+        rchain.append(_chain_of(starts, rc[0]) if len(rc) else -1)
+        wchain.append(_chain_of(starts, wc[0]) if len(wc) else -1)
+        if blk.any():
+            w_seq = np.arange(1, len(w_nodes) + 1, dtype=np.int64)
+            need.append(int(w_seq[blk].max()) - len(r_nodes))
+        else:
+            need.append(-(1 << 30))
+    finite_base = cache.base[cache.base != NEGI]
+    bound = int((finite_base.max() if len(finite_base) else 0)
+                + cache.seq_w.sum() + cache.raw_w.sum()
+                + sum(len(w) for (w, _, _) in cache.fifos) + 1)
+    ba = _BatchArrays(
+        perm=perm, inv=inv, slices=slices, starts=starts, cw=cw,
+        base_p=cache.base[perm] if n else cache.base,
+        raw_dst=raw_dst, raw_src=raw_src, raw_w=cache.raw_w,
+        raw_buckets=raw_buckets,
+        fifo_w_cols=w_cols, fifo_r_cols=r_cols, fifo_blocking=blocking,
+        fifo_need=np.asarray(need, np.int64),
+        fifo_rchain=np.asarray(rchain, np.int64),
+        fifo_wchain=np.asarray(wchain, np.int64),
+        c_src_p=(inv[cache.c_src] if len(cache.c_src) else cache.c_src),
+        bound=bound)
+    # depth-independent seed: the no-WAR (infinite-depth) fixpoint is a
+    # lower bound of every config's fixpoint (WAR edges only delay), so the
+    # per-config solve starts from it and pays only for the WAR impact
+    if n:
+        t_inf = longest_path_chains(cache.chains, cache.seq_w, cache.base,
+                                    cache.raw_dst, cache.raw_src,
+                                    cache.raw_w)[perm]
+        c_inf = ba.base_p.copy()
+        if len(raw_dst):
+            c_inf[raw_dst] = np.maximum(c_inf[raw_dst],
+                                        t_inf[raw_src] + cache.raw_w)
+    else:
+        t_inf = np.zeros(0, np.int64)
+        c_inf = np.zeros(0, np.int64)
+    ba.t_inf = t_inf
+    ba.c_inf = c_inf
+    cache.batch = ba
+    return ba
+
+
+def _war_cols(ba: _BatchArrays, fid: int, S: int):
+    """Cached per-(FIFO, depth) regenerated-WAR columns.
+
+    Returns (src_col, valid_col, cand_inf): for each of the FIFO's writes,
+    the chain-major column of its (w-S)-th read, whether the edge exists
+    under depth S (blocking, target read committed), and the edge's
+    candidate contribution under the no-WAR seed times (NEGI = none).
+    """
+    key = (fid, S)
+    hit = ba.war_cache.get(key)
+    if hit is not None:
+        return hit
+    w_cols = ba.fifo_w_cols[fid]
+    r_cols = ba.fifo_r_cols[fid]
+    nw, nr = len(w_cols), len(r_cols)
+    w_seq = np.arange(1, nw + 1, dtype=np.int64)
+    tgt = w_seq - S - 1
+    valid = ba.fifo_blocking[fid] & (tgt >= 0) & (tgt < nr)
+    src = (r_cols[np.clip(tgt, 0, nr - 1)] if nr
+           else np.zeros(nw, np.int64))
+    cand = np.where(valid, ba.t_inf[src] + 1, NEGI)
+    # a depth whose candidates cannot move the no-WAR fixpoint needs no
+    # seed push at all (slack WAR — the common case when depths grow)
+    effective = bool((cand > ba.c_inf[w_cols]).any())
+    entry = (src, valid, cand, effective)
+    ba.war_cache[key] = entry
+    return entry
+
+
+@dataclass
+class BatchOutcome:
+    """Result of :func:`resimulate_batch` over K depth configurations."""
+
+    ok: np.ndarray                 # (K,) bool: graph reused for this config
+    cycles: np.ndarray             # (K,) int64: cycle count (-1 = no result)
+    status: np.ndarray             # (K,) int8: REUSED/DEADLOCK/CYCLE/VIOLATED
+    violated: np.ndarray           # (K,) int64: # of flipped constraints
+    reasons: List[str]
+    results: List[Optional[SimResult]]
+    elapsed_s: float
+    fixpoint_rounds: int = 0
+
+    @property
+    def n_reused(self) -> int:
+        return int(self.ok.sum())
+
+    @property
+    def n_fallback(self) -> int:
+        return len(self.ok) - self.n_reused
+
+    def us_per_config(self) -> float:
+        return self.elapsed_s / max(len(self.ok), 1) * 1e6
+
+
+def _regen_war_stacked(ba: _BatchArrays, Db: np.ndarray):
+    """Stacked WAR regeneration for the reference (Jacobi) backend.
+
+    Returns (dyn_dst (m,), dyn_src (B, m), dyn_valid (B, m)) covering every
+    FIFO that can overflow for at least one config in the block; entry
+    (k, j) is the regenerated WAR edge of the j-th write under config k
+    (masked False where w <= S_k, the write is non-blocking, or the target
+    read does not exist).
+    """
+    B = len(Db)
+    dst_parts, src_parts, valid_parts = [], [], []
+    for fid, w_cols in enumerate(ba.fifo_w_cols):
+        nw = len(w_cols)
+        if nw == 0 or int(Db[:, fid].min()) >= nw:
+            continue                       # no config overflows this FIFO
+        r_cols = ba.fifo_r_cols[fid]
+        nr = len(r_cols)
+        w_seq = np.arange(1, nw + 1, dtype=np.int64)
+        tgt = w_seq[None, :] - Db[:, fid][:, None] - 1        # (B, nw)
+        valid = ba.fifo_blocking[fid][None, :] & (tgt >= 0) & (tgt < nr)
+        if nr:
+            src = r_cols[np.clip(tgt, 0, nr - 1)]
+        else:
+            src = np.zeros((B, nw), np.int64)
+        dst_parts.append(w_cols)
+        src_parts.append(src)
+        valid_parts.append(valid)
+    if not dst_parts:
+        z = np.zeros(0, np.int64)
+        return z, np.zeros((B, 0), np.int64), np.zeros((B, 0), bool)
+    return (np.concatenate(dst_parts),
+            np.concatenate(src_parts, axis=1),
+            np.concatenate(valid_parts, axis=1))
+
+
+def _check_constraints_stacked(cache: CompiledGraph, ba: _BatchArrays,
+                               t: np.ndarray, Db: np.ndarray):
+    """Vectorized Table-2 re-check of all constraints for a block of configs.
+
+    ``t``: (n, B) node times in chain-major (node-major) layout.  Returns
+    the (B,) count of flipped constraint outcomes (0 ⇒ reusable).
+    """
+    nC = len(cache.c_kind)
+    B = len(Db)
+    if nC == 0:
+        return np.zeros(B, np.int64)
+    ok = np.zeros((nC, B), bool)
+    st = t[ba.c_src_p]                                        # (nC, B)
+    for fid in range(len(cache.fifos)):
+        sel = cache.c_fifo == fid
+        if not sel.any():
+            continue
+        w_cols, r_cols = ba.fifo_w_cols[fid], ba.fifo_r_cols[fid]
+        nw, nr = len(w_cols), len(r_cols)
+        seq = cache.c_seq[sel]
+        kind = cache.c_kind[sel]
+        stf = st[sel]                                         # (m, B)
+        okf = np.zeros((len(seq), B), bool)
+        # reads: target = seq-th write (config-independent)
+        rd = kind == 0
+        if rd.any():
+            tgt = np.minimum(seq[rd] - 1, max(nw - 1, 0))
+            exists = (seq[rd] - 1) < nw
+            t_tgt = (t[w_cols[tgt]] if nw
+                     else np.zeros((int(rd.sum()), B), t.dtype))
+            okf[rd] = exists[:, None] & (t_tgt < stf[rd])
+        # writes: trivially true if seq <= S, else target read (per config)
+        wr = kind == 1
+        if wr.any():
+            seq_w = seq[wr][:, None]                          # (m, 1)
+            S = Db[None, :, fid]                              # (1, B)
+            triv = seq_w <= S
+            tgt_w = seq_w - S - 1                             # (m, B)
+            exists_w = tgt_w < nr
+            if nr:
+                idx = r_cols[np.clip(tgt_w, 0, nr - 1)]
+                t_tgt_w = np.take_along_axis(t, idx, axis=0)
+            else:
+                t_tgt_w = np.zeros(tgt_w.shape, t.dtype)
+            okf[wr] = triv | (exists_w & (t_tgt_w < stf[wr]))
+        ok[sel] = okf
+    return (ok != cache.c_out[:, None]).sum(axis=0).astype(np.int64)
+
+
+def _solve_block_reference(ba: _BatchArrays, Db: np.ndarray):
+    """Jacobi reference solve via :func:`longest_path_chains_batched`
+    (one synchronized cross pass per round; the testing oracle)."""
+    B = len(Db)
+    n = len(ba.perm)
+    if ba.bound < (1 << 28):
+        dtype, NEG = np.int32, -(1 << 29)
+    else:
+        dtype, NEG = np.int64, int(NEGI)
+    base = np.where(ba.base_p == NEGI, NEG, ba.base_p).astype(dtype)
+    base = np.broadcast_to(base, (B, n)).copy()
+    dyn_dst, dyn_src, dyn_valid = _regen_war_stacked(ba, Db)
+    times_p, conv, rounds = longest_path_chains_batched(
+        ba.slices, ba.cw.astype(dtype), base,
+        ba.raw_dst, ba.raw_src, ba.raw_w.astype(dtype),
+        dyn_dst, dyn_src, dyn_valid, bound=ba.bound)
+    return np.ascontiguousarray(times_p.T), conv, rounds
+
+
+def _solve_block_numpy(ba: _BatchArrays, Db: np.ndarray):
+    """Batched seeded Gauss-Seidel fixpoint for one block of configs.
+
+    Node-major ``(n, K)`` layout (cross-edge gathers/scatters hit
+    contiguous K-wide rows; the per-chain cummax streams contiguous
+    slabs).  Every config starts AT the no-WAR fixpoint, its regenerated
+    WAR candidates (per-(FIFO, depth) cached columns) are applied once,
+    and then chains are swept in module order with per-(chain, config)
+    dirty tracking — so a sweep recomputes only the chains some config's
+    WAR constraints actually moved, and slack configs converge with zero
+    sweeps.  int32 when the path-length bound allows (halves the traffic).
+
+    Returns (times (n, K) in solve dtype, converged (K,), sweeps).
+    Non-converged configs (WAR cycle: times grow past the acyclic bound,
+    or the sweep cap is hit) report False and undefined times.
+    """
+    K = len(Db)
+    n = len(ba.perm)
+    if ba.bound < (1 << 28):
+        dtype, NEG = np.int32, -(1 << 29)
+    else:
+        dtype, NEG = np.int64, int(NEGI)
+    conv_out = np.ones(K, dtype=bool)
+    if n == 0 or K == 0:
+        return np.zeros((n, K), dtype), conv_out, 0
+    cw = ba.cw.astype(dtype)
+    t_seed = np.maximum(ba.t_inf, NEG).astype(dtype)
+    c_seed = np.maximum(ba.c_inf, NEG).astype(dtype)
+    c = np.empty((n, K), dtype=dtype)
+    c[:] = c_seed[:, None]
+    t = np.empty((n, K), dtype=dtype)
+    t[:] = t_seed[:, None]
+    nch = len(ba.slices)
+    dirty = np.zeros((nch, K), dtype=bool)
+    # ---- seed pass: apply each config's WAR candidates over t_inf ----
+    war_entries = []        # [rchain, wchain, dcols, src_mat, val_mat, inv]
+    for fid, w_cols in enumerate(ba.fifo_w_cols):
+        nw = len(w_cols)
+        if nw == 0 or int(Db[:, fid].min()) >= nw:
+            continue                       # no config overflows this FIFO
+        if len(ba.fifo_r_cols[fid]) == 0:
+            continue       # blocking overflow ⇒ already masked as deadlock
+        uniq, invq = np.unique(Db[:, fid], return_inverse=True)
+        cols = [_war_cols(ba, fid, int(S)) for S in uniq]
+        src_mat = np.stack([cc[0] for cc in cols], axis=1)    # (nw, u)
+        val_mat = np.stack([cc[1] for cc in cols], axis=1)
+        if any(cc[3] for cc in cols):      # some depth's WAR binds at seed
+            cand_mat = np.maximum(np.stack([cc[2] for cc in cols], axis=1),
+                                  NEG).astype(dtype)
+            cand = cand_mat[:, invq]                          # (nw, K)
+            old = c[w_cols]
+            np.maximum(cand, old, out=cand)
+            chm = cand != old
+            if chm.any():
+                c[w_cols] = cand
+                dirty[int(ba.fifo_wchain[fid])] |= chm.any(axis=0)
+        war_entries.append([int(ba.fifo_rchain[fid]),
+                            int(ba.fifo_wchain[fid]), w_cols,
+                            src_mat, val_mat, invq])
+    war_by_reader: dict = {}
+    for e in war_entries:
+        war_by_reader.setdefault(e[0], []).append(e)
+
+    times_out = None
+    act = np.arange(K)
+    sweeps = 0
+    max_sweeps = n + 2
+    while True:
+        # ---- retire configs with no pending chains (or diverged) ----
+        pend = dirty.any(axis=0)
+        if sweeps >= 8 or not pend.any():
+            over = (t > ba.bound).any(axis=0)
+        else:
+            over = np.zeros(len(act), dtype=bool)
+        done = ~pend | over
+        if done.any():
+            if done.all() and len(act) == K:
+                # fast path: the whole block settles at once — hand the
+                # working matrix back without the (n, K) copy
+                conv_out[act] = ~over
+                return t, conv_out, sweeps
+            if times_out is None:
+                times_out = np.empty((n, K), dtype=dtype)
+            rows = act[done]
+            times_out[:, rows] = t[:, done]
+            conv_out[rows] = ~over[done]
+            if done.all():
+                break
+            keep = ~done
+            act = act[keep]
+            c = np.ascontiguousarray(c[:, keep])
+            t = np.ascontiguousarray(t[:, keep])
+            dirty = np.ascontiguousarray(dirty[:, keep])
+            for e in war_entries:
+                e[5] = e[5][keep]
+        if sweeps >= max_sweeps:
+            if times_out is None:
+                times_out = np.empty((n, K), dtype=dtype)
+            times_out[:, act] = t                  # cap hit: cyclic leftovers
+            conv_out[act] = False
+            break
+        sweeps += 1
+        # ---- one Gauss-Seidel sweep over dirty chains, module order ----
+        for ci in range(nch):
+            if not dirty[ci].any():
+                continue
+            dirty[ci] = False
+            lo, hi = ba.slices[ci]
+            seg = c[lo:hi] - cw[lo:hi, None]
+            np.maximum.accumulate(seg, axis=0, out=seg)
+            seg += cw[lo:hi, None]
+            if np.array_equal(seg, t[lo:hi]):
+                continue                   # no new times ⇒ pushes stand
+            t[lo:hi] = seg
+            for (dc, scols, dcols, w) in ba.raw_buckets.get(ci, ()):
+                cand = t[scols] + w[:, None].astype(dtype)
+                old = c[dcols]
+                np.maximum(cand, old, out=cand)
+                chm = cand != old
+                if chm.any():
+                    c[dcols] = cand
+                    dirty[dc] |= chm.any(axis=0)
+            for e in war_by_reader.get(ci, ()):
+                wc, dcols, src_mat, val_mat, invq = \
+                    e[1], e[2], e[3], e[4], e[5]
+                src_idx = src_mat[:, invq]                    # (nw, K_act)
+                cand = np.take_along_axis(t, src_idx, axis=0)
+                cand += 1
+                old = c[dcols]
+                cand = np.where(val_mat[:, invq], cand, old)
+                np.maximum(cand, old, out=cand)
+                chm = cand != old
+                if chm.any():
+                    c[dcols] = cand
+                    dirty[wc] |= chm.any(axis=0)
+    return times_out, conv_out, sweeps
+
+
+def resimulate_batch(result: SimResult, depth_matrix,
+                     fallback: bool = True, backend: str = "numpy",
+                     block: int = 128,
+                     jax_interpret: bool = True) -> BatchOutcome:
+    """Incrementally re-simulate ``result`` under K depth vectors at once.
+
+    ``depth_matrix``: (K, n_fifos) array-like of candidate depths.  Returns
+    a :class:`BatchOutcome` whose k-th entry is exactly what
+    ``resimulate(result, depth_matrix[k])`` would report — reusable configs
+    get their cycle count from the shared batched fixpoint; deadlocked,
+    cyclic or constraint-violating configs fall back to a full
+    re-simulation (``fallback=True``) of just that config.
+
+    ``backend="jax"`` lowers the fixpoint onto the dense Pallas max-plus
+    kernel via ``jax.vmap`` (device-resident sweeps; small graphs only);
+    ``backend="reference"`` runs the synchronous Jacobi oracle.  ``block``
+    bounds the numpy working set (configs per fixpoint slab).
+    """
+    t0 = _time.perf_counter()
+    engine: OmniSim = result.graph
+    assert isinstance(engine, OmniSim), "batched re-sim needs an OmniSim result"
+    D = np.asarray(depth_matrix, dtype=np.int64)
+    if D.ndim == 1:
+        D = D[None, :]
+    K, F = D.shape
+    if F != len(engine.fifos):
+        raise ValueError(f"depth_matrix has {F} columns for "
+                         f"{len(engine.fifos)} FIFOs")
+    cache = compile_graph(engine)
+    ba = _batch_arrays(cache)
+
+    status = np.zeros(K, dtype=np.int8)
+    cycles = np.full(K, -1, dtype=np.int64)
+    violated = np.zeros(K, dtype=np.int64)
+    # ① structural infeasibility: committed blocking write whose target
+    # read never occurred can never commit — deadlock under these depths
+    dead = (D < ba.fifo_need[None, :]).any(axis=1)
+    status[dead] = DEADLOCK
+    alive = np.flatnonzero(~dead)
+    total_rounds = 0
+
+    if len(alive):
+        if backend == "jax":
+            blocks = [(np.arange(len(alive)),
+                       *_solve_dense_jax(cache, ba, D[alive],
+                                         interpret=jax_interpret))]
+        elif backend in ("numpy", "reference"):
+            solve = (_solve_block_numpy if backend == "numpy"
+                     else _solve_block_reference)
+            blocks = []
+            for lo in range(0, len(alive), max(block, 1)):
+                sl = np.arange(lo, min(lo + max(block, 1), len(alive)))
+                t_nm, conv, rounds = solve(ba, D[alive[sl]])
+                total_rounds = max(total_rounds, rounds)
+                blocks.append((sl, t_nm, conv))
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+        for sl, t_nm, conv in blocks:
+            rows = alive[sl]
+            status[rows[~conv]] = CYCLE                       # ② event order
+            if conv.any():
+                # ③ constraint re-check, all configs at once
+                viol = _check_constraints_stacked(cache, ba, t_nm,
+                                                  D[rows])
+                violated[rows[conv]] = viol[conv]
+                status[rows[conv & (viol > 0)]] = VIOLATED
+                good = conv & (viol == 0)
+                if good.any():
+                    cyc = (t_nm.max(axis=0) if t_nm.shape[0]
+                           else np.zeros(len(rows), np.int64))
+                    cycles[rows[good]] = cyc[good]
+
+    # ④ fall back to full re-simulation for exactly the failed subset
+    results: List[Optional[SimResult]] = [None] * K
+    reasons: List[str] = [""] * K
+    saved_depths = engine.program.depths()
+    try:
+        for k in range(K):
+            if status[k] == REUSED:
+                reasons[k] = _STATUS_REASON[REUSED]
+                results[k] = SimResult(
+                    program=result.program, outputs=dict(result.outputs),
+                    cycles=int(cycles[k]), engine="omnisim-batch",
+                    stats=result.stats, graph=engine,
+                    constraints=result.constraints,
+                    depths=tuple(int(d) for d in D[k]))
+                continue
+            if status[k] == DEADLOCK:
+                fid = int(np.flatnonzero(D[k] < ba.fifo_need)[0])
+                reasons[k] = (f"a committed write on "
+                              f"'{engine.fifos[fid].name}' can never commit "
+                              f"with depth {int(D[k, fid])} (would deadlock)")
+            elif status[k] == CYCLE:
+                reasons[k] = _STATUS_REASON[CYCLE]
+            else:
+                reasons[k] = (f"{int(violated[k])} constraint(s) violated — "
+                              f"control/data flow diverges")
+            if fallback:
+                full = simulate(engine.program,
+                                depths=tuple(int(d) for d in D[k]))
+                results[k] = full
+                cycles[k] = full.cycles
+    finally:
+        engine.program.with_depths(saved_depths)
+
+    return BatchOutcome(ok=status == REUSED, cycles=cycles, status=status,
+                        violated=violated, reasons=reasons, results=results,
+                        elapsed_s=_time.perf_counter() - t0,
+                        fixpoint_rounds=total_rounds)
+
+
+# ---------------------------------------------------------------------------
+# jax.vmap backend: dense max-plus fixpoint on the Pallas kernel
+# ---------------------------------------------------------------------------
+def _solve_dense_jax(cache: CompiledGraph, ba: _BatchArrays, Db: np.ndarray,
+                     interpret: bool = True):
+    """Batched node times via ``jax.vmap`` over the dense Pallas max-plus
+    kernel (``repro.kernels.maxplus``) — the device-resident path.
+
+    Builds one dense ``(K, npad, npad)`` max-plus adjacency (shared SEQ+RAW
+    skeleton broadcast, per-config WAR entries scattered in) and vmaps the
+    jitted fixpoint.  Convergence is certified by one extra sweep:
+    non-converged rows (WAR cycles) report False.  Small graphs only — the
+    dense form is O(n^2) per config.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels.maxplus.kernel import BLK, NEG as NEG32, maxplus_sweep
+    from ..kernels.maxplus.ops import longest_path
+
+    n = cache.n
+    npad = ((n + BLK - 1) // BLK) * BLK if n else BLK
+    K = len(Db)
+    if K * npad * npad > (1 << 27):
+        raise ValueError(
+            f"dense jax backend needs K*npad^2 <= 2^27 "
+            f"(got {K}x{npad}^2); use backend='numpy' for large graphs")
+    A = np.full((npad, npad), int(NEG32), dtype=np.int32)
+    b = np.full((npad,), int(NEG32), dtype=np.int32)
+    b[:n] = np.maximum(cache.base, int(NEG32)).astype(np.int32)
+    for ch in cache.chains:                      # SEQ skeleton
+        if len(ch) > 1:
+            A[ch[1:], ch[:-1]] = cache.seq_w[ch[1:]].astype(np.int32)
+    A[cache.raw_dst, cache.raw_src] = cache.raw_w.astype(np.int32)
+    AK = np.broadcast_to(A, (K, npad, npad)).copy()
+    for fid, (w_nodes, r_nodes, blk) in enumerate(cache.fifos):
+        nw, nr = len(w_nodes), len(r_nodes)
+        if nw == 0 or int(Db[:, fid].min()) >= nw:
+            continue
+        w_seq = np.arange(1, nw + 1, dtype=np.int64)
+        tgt = w_seq[None, :] - Db[:, fid][:, None] - 1
+        valid = blk[None, :] & (tgt >= 0) & (tgt < nr)
+        kk, jj = np.nonzero(valid)
+        AK[kk, w_nodes[jj], r_nodes[tgt[kk, jj]]] = 1
+    aK = jnp.asarray(AK)
+    bK = jnp.asarray(b)
+    solve = jax.vmap(lambda a: longest_path(a, bK, use_pallas=True,
+                                            interpret=interpret))
+    tK = solve(aK)
+    # certify fixpoint: one more sweep must be a no-op (cycles diverge)
+    sweep = jax.vmap(lambda a, t: maxplus_sweep(a, t, bK,
+                                                interpret=interpret))
+    conv = np.asarray((sweep(aK, tK) == tK).all(axis=1))
+    times = np.asarray(tK)[:, :n].astype(np.int64)
+    times_nm = (np.ascontiguousarray(times[:, ba.perm].T) if n
+                else times.T)
+    return times_nm, conv

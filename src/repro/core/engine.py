@@ -31,10 +31,11 @@ schedule-independent — the property the paper fights OS scheduling for.
 """
 from __future__ import annotations
 
+import heapq
 import random
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -86,7 +87,9 @@ class OmniSim:
         self.outputs: Dict[str, Any] = {}
         self.stats = SimStats()
         self.constraints: List[Constraint] = []
-        self.query_pool: List[Query] = []
+        # min-heap of (source_time, qid, Query): earliest-query-first access
+        # is O(log n) instead of the repeated full sorts of earlier revisions
+        self.query_pool: List[Tuple[int, int, Query]] = []
         self._qid = 0
         self._rng = random.Random(shuffle_seed) if shuffle_seed is not None else None
         self._verify_finalization = verify_finalization
@@ -232,8 +235,7 @@ class OmniSim:
                     op = task.gen.send(task.send_value)
                 task.send_value = None
             except StopIteration:
-                end = self._new_node(task, NodeKind.END, task.clock)
-                del end
+                self._new_node(task, NodeKind.END, task.clock)
                 task.state = TaskState.DONE
                 return
             if not self._exec_op(task, op):
@@ -270,7 +272,7 @@ class OmniSim:
         u = max(task.clock, wt + 1)
         node = self._new_node(task, NodeKind.FIFO_READ, u, op.fifo.fid, r,
                               issue=task.clock)
-        self._add_raw_edge(node, tbl.writes[r - 1], 1)
+        self._add_raw_edge(node, int(tbl.writes[r - 1]), 1)
         task.send_value = tbl.commit_read(node.idx, u)
         task.clock = u + 1
         self._wake(self._waiting_writer, op.fifo.fid)
@@ -295,8 +297,9 @@ class OmniSim:
             u = max(task.clock, rt + 1)
             node = self._new_node(task, NodeKind.FIFO_WRITE, u, op.fifo.fid, w,
                                   issue=task.clock)
-            self._add_war_edge(node, tbl.reads[tgt], 1)
-            self._war_edges.append((node.idx, tbl.reads[tgt], op.fifo.fid, w))
+            src = int(tbl.reads[tgt])
+            self._add_war_edge(node, src, 1)
+            self._war_edges.append((node.idx, src, op.fifo.fid, w))
             tbl.commit_write(node.idx, u, op.value)
         task.send_value = None
         task.clock = u + 1
@@ -334,7 +337,7 @@ class OmniSim:
             task.state = TaskState.PAUSED_QUERY
             task.pending_op = op
             task.pending_query = q
-            self.query_pool.append(q)
+            heapq.heappush(self.query_pool, (q.source_time, q.qid, q))
             return False
         self._apply_query_result(task, op, rtype, seq, t, bool(verdict))
         return True
@@ -416,19 +419,22 @@ class OmniSim:
     def _resolve_queries(self) -> bool:
         """❹ resolve all currently-definitive queries, earliest-first."""
         progressed = False
-        self.query_pool.sort(key=lambda q: (q.source_time, q.qid))
-        remaining: List[Query] = []
-        for q in self.query_pool:
+        remaining: List[Tuple[int, int, Query]] = []
+        while self.query_pool:
+            entry = heapq.heappop(self.query_pool)
+            q = entry[2]
             tbl = self.fifos[q.fifo]
             if q.rtype in (RequestType.FIFO_NB_READ, RequestType.FIFO_CAN_READ):
                 verdict = tbl.can_read_at(q.source_seq, q.source_time)
             else:
                 verdict = tbl.can_write_at(q.source_seq, q.source_time)
             if verdict is None:
-                remaining.append(q)
+                remaining.append(entry)
                 continue
             self._resolve_one(q, bool(verdict))
             progressed = True
+        # drained in heap order, so ``remaining`` is sorted — already a valid
+        # min-heap, no heapify needed
         self.query_pool = remaining
         return progressed
 
@@ -442,8 +448,7 @@ class OmniSim:
         future commit has cycle >= t_q and cannot satisfy a strictly-before
         t_q comparison — the earliest query resolves *false*.
         """
-        self.query_pool.sort(key=lambda q: (q.source_time, q.qid))
-        q = self.query_pool.pop(0)
+        q = heapq.heappop(self.query_pool)[2]
         self.stats.queries_forced_false += 1
         self._resolve_one(q, False)
 

@@ -212,6 +212,97 @@ def longest_path_chains(chains, seq_w, base, cross_dst, cross_src, cross_w,
     return t
 
 
+def longest_path_chains_batched(chain_slices, cw, base, cross_dst, cross_src,
+                                cross_w, dyn_dst, dyn_src_idx, dyn_valid,
+                                bound: int, max_iters: int = 0):
+    """Batched chain-decomposed longest path: K configs in one fixpoint.
+
+    The depth-batched analogue of :func:`longest_path_chains` — node columns
+    are permuted chain-major (``chain_slices`` index contiguous column
+    ranges), so the per-chain pass is one ``np.maximum.accumulate`` over a
+    ``(K, len)`` contiguous view per chain, for ALL K configs at once.
+
+    Cross edges split into two groups:
+
+      * static (config-independent, e.g. RAW): ``cross_dst/src/w`` — 1-D
+        arrays shared across the batch;
+      * dynamic (config-dependent, e.g. regenerated WAR): ``dyn_dst`` (m,)
+        destination columns with per-config gather indices ``dyn_src_idx``
+        (K, m) and mask ``dyn_valid`` (K, m); weight is 1 (FIFO hold time).
+
+    Destination columns must be UNIQUE within and across the two groups
+    (each read node has exactly one RAW in-edge, each write node at most one
+    WAR in-edge per config), so the scatter-max is a plain fancy-indexed
+    ``np.maximum`` — no ``np.maximum.at`` buffering.
+
+    ``base`` is the (K, n) initial contribution matrix (consumed in place).
+    Rows converge independently: converged rows are retired from the working
+    set each round, so one pathological config (a WAR cycle grows its times
+    past ``bound``) does not tax the others.  Returns ``(times, converged,
+    rounds)`` — times (K, n); ``converged[k]`` False means config k's
+    regenerated edges formed a cycle (times for that row are meaningless).
+    """
+    K, n = base.shape
+    times = np.empty_like(base)
+    converged = np.zeros(K, dtype=bool)
+    if n == 0 or K == 0:
+        converged[:] = True
+        return times, converged, 0
+    iters = max_iters or (n + 2)
+    act = np.arange(K)                      # rows still iterating
+    c = base                                # (K_act, n) working contributions
+    t = np.empty_like(c)
+    have_dyn = len(dyn_dst) > 0
+    dyn_src_act = dyn_src_idx if have_dyn else None
+    dyn_valid_act = dyn_valid if have_dyn else None
+    rounds = 0
+    while len(act):
+        rounds += 1
+        # ---- chain pass: t = cw + cummax(c - cw) per contiguous chain ----
+        for (lo, hi) in chain_slices:
+            seg = c[:, lo:hi] - cw[lo:hi]
+            np.maximum.accumulate(seg, axis=1, out=seg)
+            seg += cw[lo:hi]
+            t[:, lo:hi] = seg
+        if rounds > iters:
+            break                           # leftover rows: cycle
+        # ---- cross pass: unique-dst scatter-max into c ----
+        changed = np.zeros(len(act), dtype=bool)
+        if len(cross_dst):
+            cand = t[:, cross_src] + cross_w
+            old = c[:, cross_dst]
+            np.maximum(cand, old, out=cand)
+            changed |= (cand != old).any(axis=1)
+            c[:, cross_dst] = cand
+        if have_dyn:
+            cand = np.take_along_axis(t, dyn_src_act, axis=1)
+            cand += 1
+            old = c[:, dyn_dst]
+            # masked candidates: invalid (w <= S, NB, or no target) entries
+            # must not contribute
+            cand = np.where(dyn_valid_act, cand, old)
+            np.maximum(cand, old, out=cand)
+            changed |= (cand != old).any(axis=1)
+            c[:, dyn_dst] = cand
+        # ---- retire rows: fixpoint reached or blown past the DAG bound ----
+        over = (t > bound).any(axis=1)      # positive cycle: early exit
+        done = ~changed | over
+        if done.any():
+            rows = act[done]
+            times[rows] = t[done]
+            converged[rows] = ~over[done]
+            keep = ~done
+            act = act[keep]
+            c = c[keep]
+            t = t[keep]
+            if have_dyn:
+                dyn_src_act = dyn_src_act[keep]
+                dyn_valid_act = dyn_valid_act[keep]
+    if len(act):                            # hit the iteration cap: cycles
+        times[act] = t
+    return times, converged, rounds
+
+
 def to_dense_blocks(indptr: np.ndarray, src: np.ndarray, wgt: np.ndarray,
                     base: np.ndarray, pad_to: int = 128):
     """Dense max-plus adjacency for the Pallas kernel (small graphs).

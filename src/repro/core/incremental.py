@@ -17,12 +17,18 @@ Infeasibility is also detected structurally: a committed blocking write
 whose (w - S')-th target read never occurred can never commit under the new
 depths (deadlock), and regenerated WAR edges that create a cycle mean the
 old event order cannot be replayed; both force a full re-sim.
+
+The engine-side compiled-graph cache (:class:`CompiledGraph`, built once by
+:func:`compile_graph` and stored on the engine) is the analogue of
+LightningSimV2's compile-once/re-solve-many design: every later
+``resimulate``/``resimulate_batch`` call over the same base run shares it —
+only the WAR regeneration and the fixpoint depend on the candidate depths.
 """
 from __future__ import annotations
 
 import time as _time
-from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -30,6 +36,8 @@ from .engine import OmniSim, SEQ, RAW, WAR, simulate
 from .events import RequestType
 from .graph import longest_path_chains, longest_path_numpy
 from .program import SimResult
+
+NEGI = np.int64(-(1 << 60))
 
 
 @dataclass
@@ -41,22 +49,52 @@ class IncrementalOutcome:
     violated: int = 0
 
 
-def _cache_base_arrays(engine: OmniSim):
-    """One-time numpy caches on the engine: base (SEQ+RAW) edge arrays,
-    per-FIFO node-id arrays, and constraint arrays.  Subsequent incremental
-    calls are fully vectorized (this is the engine-side analogue of
-    LightningSimV2's compiled-graph reuse)."""
-    if getattr(engine, "_incr_cache", None) is not None:
-        return engine._incr_cache
+@dataclass
+class CompiledGraph:
+    """Depth-independent numpy snapshot of a finished OmniSim run.
+
+    Holds the base (SEQ + RAW) edge structure in chain-decomposed form,
+    per-FIFO committed-event arrays, and the recorded constraint outcomes —
+    everything incremental and batched re-simulation need, so repeated calls
+    never touch the Python-object graph again.  ``batch`` is the lazily
+    built chain-major-permuted view used by ``core/dse.py``.
+    """
+
+    n: int
+    raw_dst: np.ndarray            # RAW cross edges (depth-independent)
+    raw_src: np.ndarray
+    raw_w: np.ndarray
+    base: np.ndarray               # source contribution (NEGI = none)
+    chains: List[np.ndarray]       # per-module node id sequences
+    seq_w: np.ndarray              # SEQ weight into each node (0 at heads)
+    fifos: List[Tuple[np.ndarray, np.ndarray, np.ndarray]]
+    # ^ per FIFO: (write nodes, read nodes, blocking-write mask)
+    c_kind: np.ndarray             # 0 = can-read, 1 = can-write
+    c_fifo: np.ndarray
+    c_seq: np.ndarray
+    c_src: np.ndarray
+    c_out: np.ndarray
+    batch: Any = field(default=None, repr=False)   # built by core/dse.py
+
+
+def compile_graph(engine: OmniSim) -> CompiledGraph:
+    """Build (once) and return the engine's compiled-graph cache.
+
+    Chain decomposition: per-module node sequences (SEQ edges) plus
+    cross-module RAW edges; WAR edges are depth-dependent and regenerated
+    per candidate depth vector.  Subsequent incremental/batched calls are
+    fully vectorized against these arrays (the engine-side analogue of
+    LightningSimV2's compiled-graph reuse).
+    """
+    cached = getattr(engine, "_incr_cache", None)
+    if cached is not None:
+        return cached
     nodes = engine.graph.nodes
     n = len(nodes)
-    NEGI = np.int64(-(1 << 60))
-    # chain decomposition: per-module node sequences (SEQ edges), plus
-    # cross-module RAW edges; WAR edges are depth-dependent and regenerated.
     dsts, srcs, wgts = [], [], []
     base_c = np.full(n, NEGI, dtype=np.int64)
     seq_w = np.zeros(n, dtype=np.int64)
-    chains_map = {}
+    chains_map: Dict[int, List[int]] = {}
     for node in nodes:
         chains_map.setdefault(node.module, []).append(node.idx)
         if not node.preds:
@@ -75,15 +113,16 @@ def _cache_base_arrays(engine: OmniSim):
     # NB-committed writes never stall: regenerated WAR edges must attach
     # only to blocking writes (NB depth-dependence is a CONSTRAINT).
     nb_write_nodes = {
-        c.source_node for c in engine.constraints
+        int(c.source_node) for c in engine.constraints
         if c.rtype in (RequestType.FIFO_NB_WRITE, RequestType.FIFO_CAN_WRITE)
         and c.outcome}
     fifo_np = []
     for tbl in engine.fifos:
-        w_nodes = np.asarray(tbl.writes, np.int64)
-        blocking = np.asarray([w not in nb_write_nodes for w in tbl.writes],
-                              bool)
-        fifo_np.append((w_nodes, np.asarray(tbl.reads, np.int64), blocking))
+        w_nodes = np.asarray(tbl.writes, np.int64).copy()
+        blocking = np.asarray([int(w) not in nb_write_nodes
+                               for w in w_nodes], bool)
+        fifo_np.append((w_nodes, np.asarray(tbl.reads, np.int64).copy(),
+                        blocking))
     # constraint arrays: kind 0 = can-read (target = seq-th write),
     # kind 1 = can-write (target depends on depth)
     c_kind, c_fifo, c_seq, c_src, c_out = [], [], [], [], []
@@ -95,33 +134,37 @@ def _cache_base_arrays(engine: OmniSim):
         c_seq.append(c.source_seq)
         c_src.append(c.source_node)
         c_out.append(c.outcome)
-    engine._incr_cache = {
-        "n": n,
-        "dst": np.asarray(dsts, np.int64),
-        "src": np.asarray(srcs, np.int64),
-        "wgt": np.asarray(wgts, np.int64),
-        "base": base_c,
-        "chains": chains,
-        "seq_w": seq_w,
-        "fifos": fifo_np,
-        "c_kind": np.asarray(c_kind, np.int64),
-        "c_fifo": np.asarray(c_fifo, np.int64),
-        "c_seq": np.asarray(c_seq, np.int64),
-        "c_src": np.asarray(c_src, np.int64),
-        "c_out": np.asarray(c_out, bool),
-    }
-    return engine._incr_cache
+    cg = CompiledGraph(
+        n=n,
+        raw_dst=np.asarray(dsts, np.int64),
+        raw_src=np.asarray(srcs, np.int64),
+        raw_w=np.asarray(wgts, np.int64),
+        base=base_c,
+        chains=chains,
+        seq_w=seq_w,
+        fifos=fifo_np,
+        c_kind=np.asarray(c_kind, np.int64),
+        c_fifo=np.asarray(c_fifo, np.int64),
+        c_seq=np.asarray(c_seq, np.int64),
+        c_src=np.asarray(c_src, np.int64),
+        c_out=np.asarray(c_out, bool),
+    )
+    engine._incr_cache = cg
+    return cg
+
+
+# backward-compatible alias (pre-CompiledGraph name)
+_cache_base_arrays = compile_graph
 
 
 def _cross_edges(engine: OmniSim, depths: Sequence[int]):
     """RAW cross edges (cached) + WAR edges regenerated for ``depths`` —
     fully vectorized."""
-    cache = _cache_base_arrays(engine)
-    dst_parts = [cache["dst"]]
-    src_parts = [cache["src"]]
-    wgt_parts = [cache["wgt"]]
-    for tbl, (w_nodes, r_nodes, blocking) in zip(engine.fifos,
-                                                 cache["fifos"]):
+    cache = compile_graph(engine)
+    dst_parts = [cache.raw_dst]
+    src_parts = [cache.raw_src]
+    wgt_parts = [cache.raw_w]
+    for tbl, (w_nodes, r_nodes, blocking) in zip(engine.fifos, cache.fifos):
         S = depths[tbl.fid]
         nw = len(w_nodes)
         if nw <= S:
@@ -145,6 +188,43 @@ def _cross_edges(engine: OmniSim, depths: Sequence[int]):
             np.concatenate(wgt_parts), None)
 
 
+def check_constraints(cache: CompiledGraph, times: np.ndarray,
+                      depths: Sequence[int]) -> int:
+    """Re-evaluate every stored constraint against ``times`` (paper
+    Sec. 7.2); returns the number of flipped outcomes."""
+    if not len(cache.c_kind):
+        return 0
+    new_ok = np.zeros(len(cache.c_kind), bool)
+    src_t = times[cache.c_src]
+    for fid, (w_nodes, r_nodes, _blk) in enumerate(cache.fifos):
+        S = depths[fid]
+        sel = cache.c_fifo == fid
+        if not sel.any():
+            continue
+        seq = cache.c_seq[sel]
+        kind = cache.c_kind[sel]
+        st = src_t[sel]
+        ok = np.zeros(len(seq), bool)
+        # reads: target = seq-th write
+        rd = kind == 0
+        tgt = np.minimum(seq[rd] - 1, max(len(w_nodes) - 1, 0))
+        exists = (seq[rd] - 1) < len(w_nodes)
+        t_tgt = times[w_nodes[tgt]] if len(w_nodes) else \
+            np.zeros(len(tgt), np.int64)
+        ok[rd] = exists & (t_tgt < st[rd])
+        # writes: trivially true if seq <= S, else target read
+        wr = kind == 1
+        seq_w = seq[wr]
+        triv = seq_w <= S
+        tgt_w = np.clip(seq_w - S - 1, 0, max(len(r_nodes) - 1, 0))
+        exists_w = (seq_w - S - 1) < len(r_nodes)
+        t_tgt_w = times[r_nodes[tgt_w]] if len(r_nodes) else \
+            np.zeros(len(tgt_w), np.int64)
+        ok[wr] = triv | (exists_w & (t_tgt_w < st[wr]))
+        new_ok[sel] = ok
+    return int((new_ok != cache.c_out).sum())
+
+
 def resimulate(result: SimResult, new_depths: Sequence[int],
                fallback: bool = True) -> IncrementalOutcome:
     """Attempt incremental re-simulation of an OmniSim result.
@@ -157,48 +237,18 @@ def resimulate(result: SimResult, new_depths: Sequence[int],
     assert isinstance(engine, OmniSim), "incremental re-sim needs an OmniSim result"
     new_depths = tuple(int(d) for d in new_depths)
 
-    cache = _cache_base_arrays(engine)
+    cache = compile_graph(engine)
     cross_dst, cross_src, cross_w, err = _cross_edges(engine, new_depths)
     if err is None:
         try:
-            times = longest_path_chains(cache["chains"], cache["seq_w"],
-                                        cache["base"], cross_dst, cross_src,
+            times = longest_path_chains(cache.chains, cache.seq_w,
+                                        cache.base, cross_dst, cross_src,
                                         cross_w)
         except ValueError:           # WAR edges formed a cycle
             err = "regenerated WAR edges create a cycle (event order invalid)"
     if err is None:
         # re-evaluate constraints (paper Sec. 7.2) — vectorized
-        violated = 0
-        if len(cache["c_kind"]):
-            new_ok = np.zeros(len(cache["c_kind"]), bool)
-            src_t = times[cache["c_src"]]
-            for fid, (w_nodes, r_nodes, _blk) in enumerate(cache["fifos"]):
-                S = new_depths[fid]
-                sel = cache["c_fifo"] == fid
-                if not sel.any():
-                    continue
-                seq = cache["c_seq"][sel]
-                kind = cache["c_kind"][sel]
-                st = src_t[sel]
-                ok = np.zeros(len(seq), bool)
-                # reads: target = seq-th write
-                rd = kind == 0
-                tgt = np.minimum(seq[rd] - 1, max(len(w_nodes) - 1, 0))
-                exists = (seq[rd] - 1) < len(w_nodes)
-                t_tgt = times[w_nodes[tgt]] if len(w_nodes) else \
-                    np.zeros(len(tgt), np.int64)
-                ok[rd] = exists & (t_tgt < st[rd])
-                # writes: trivially true if seq <= S, else target read
-                wr = kind == 1
-                seq_w = seq[wr]
-                triv = seq_w <= S
-                tgt_w = np.clip(seq_w - S - 1, 0, max(len(r_nodes) - 1, 0))
-                exists_w = (seq_w - S - 1) < len(r_nodes)
-                t_tgt_w = times[r_nodes[tgt_w]] if len(r_nodes) else \
-                    np.zeros(len(tgt_w), np.int64)
-                ok[wr] = triv | (exists_w & (t_tgt_w < st[wr]))
-                new_ok[sel] = ok
-            violated = int((new_ok != cache["c_out"]).sum())
+        violated = check_constraints(cache, times, new_depths)
         if violated == 0:
             cycles = int(times.max()) if len(times) else 0
             elapsed = _time.perf_counter() - t0

@@ -109,7 +109,14 @@ def moe_ep(p, x, cfg: ArchConfig, mesh, expert_axis: str = "model",
     Dropless up to ``capacity_factor``; overflow tokens fall back to zero
     contribution for that expert choice (standard capacity semantics).
     """
-    shard_map = jax.shard_map
+    # jax >= 0.5 exposes shard_map at top level (check_vma kwarg); older
+    # releases only have the experimental module (check_rep kwarg).
+    try:
+        shard_map = jax.shard_map
+        smap_kwargs = {"check_vma": False}
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map
+        smap_kwargs = {"check_rep": False}
 
     mo = cfg.moe
     n = mesh.shape[expert_axis]
@@ -171,7 +178,7 @@ def moe_ep(p, x, cfg: ArchConfig, mesh, expert_axis: str = "model",
         local_fn, mesh=mesh,
         in_specs=(P(), espec, espec, espec, token_spec),
         out_specs=token_spec,
-        check_vma=False)
+        **smap_kwargs)
     out = fn(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)
     if mo.num_shared_experts:
         out = out + mlp(p["shared"], x)

@@ -1,0 +1,215 @@
+"""Batched incremental re-simulation (core/dse.py).
+
+Exactness contract: ``resimulate_batch(result, D)[k]`` must agree
+config-for-config with ``resimulate(result, D[k])`` — same reuse verdict —
+and, for every config, with a from-scratch ``simulate()`` under those
+depths (cycle counts and outputs), whether the config was reused or fell
+back (deadlock / WAR cycle / constraint flip).
+"""
+import numpy as np
+import pytest
+
+from repro.core import resimulate, resimulate_batch, simulate
+from repro.core.program import Emit, Program, Read, Write
+from repro.designs.paper import fig4_ex4a, fig4_ex5
+from repro.designs.typea import producer_consumer, skynet_like
+
+
+def _assert_batch_exact(out, builder, D, base):
+    """Every config: verdict matches looped resimulate, numbers match a
+    from-scratch simulation."""
+    for k in range(len(D)):
+        depths = tuple(int(d) for d in D[k])
+        inc = resimulate(base, depths)
+        full = simulate(builder(), depths=depths)
+        assert bool(out.ok[k]) == inc.ok, \
+            (k, depths, out.reasons[k], inc.reason)
+        assert out.cycles[k] == full.cycles, (k, depths)
+        assert out.results[k].outputs == full.outputs, (k, depths)
+        assert out.results[k].deadlock == full.deadlock, (k, depths)
+
+
+# ------------------------------------------------------------------- Type A
+def test_batch_matches_loop_and_full_typea():
+    """Deep blocking-only pipeline; depths from starving (1) to slack."""
+    builder = lambda: skynet_like(items=48, depth=6)
+    base = simulate(builder())
+    rng = np.random.default_rng(7)
+    D = rng.integers(1, 13, size=(24, len(base.depths)))
+    out = resimulate_batch(base, D)
+    _assert_batch_exact(out, builder, D, base)
+    assert out.n_reused > 0          # slack configs must actually reuse
+
+
+def test_batch_single_and_shapes():
+    base = simulate(producer_consumer(n=32, depth=2))
+    out = resimulate_batch(base, [8])            # 1-D = one config
+    full = simulate(producer_consumer(n=32, depth=8))
+    assert out.cycles[0] == full.cycles and out.ok.shape == (1,)
+    with pytest.raises(ValueError):
+        resimulate_batch(base, np.ones((3, 5), dtype=int))
+
+
+# ------------------------------------------------------------------- Type C
+def test_batch_typec_constraint_flips():
+    """fig4_ex5: (2,100) reuses, (100,2) flips constraints mid-batch —
+    the batch must mix reuse and fallback correctly (paper Table 6)."""
+    base = simulate(fig4_ex5())
+    D = np.array([(2, 100), (100, 2), (2, 2), (1, 1), (64, 64)])
+    out = resimulate_batch(base, D)
+    _assert_batch_exact(out, fig4_ex5, D, simulate(fig4_ex5()))
+    assert bool(out.ok[0]) and not bool(out.ok[1])
+    assert "constraint" in out.reasons[1]
+    # the two ends genuinely diverge functionally
+    assert out.results[0].outputs != out.results[1].outputs
+
+
+def test_batch_typec_nb_drop_design():
+    """fig4_ex4a (silent-drop WriteNB): depth changes alter the dropped
+    set, so most shrinks must be caught by the constraint re-check."""
+    base = simulate(fig4_ex4a(n=96))
+    D = np.array([[1], [2], [3], [8], [96]])
+    out = resimulate_batch(base, D)
+    _assert_batch_exact(out, lambda: fig4_ex4a(n=96), D, simulate(fig4_ex4a(n=96)))
+
+
+def test_batch_detects_new_deadlock():
+    """A config that starves a committed blocking write must be masked
+    structurally and fall back to a full (deadlocking) simulation."""
+    def leftover():
+        prog = Program("leftover", declared_type="A")
+        d = prog.fifo("d", 8)
+
+        @prog.module("p")
+        def p():
+            for i in range(8):
+                yield Write(d, i)
+
+        @prog.module("c")
+        def c():
+            tot = 0
+            for _ in range(4):
+                tot += (yield Read(d))
+            yield Emit("sum", tot)
+
+        return prog
+
+    base = simulate(leftover())
+    assert not base.deadlock
+    D = np.array([[8], [4], [3], [1]])
+    out = resimulate_batch(base, D)
+    _assert_batch_exact(out, leftover, D, simulate(leftover()))
+    assert bool(out.ok[0]) and bool(out.ok[1])
+    assert not bool(out.ok[2]) and not bool(out.ok[3])
+    assert "deadlock" in out.reasons[2]
+    assert out.results[2].deadlock        # fallback reproduces the deadlock
+
+
+def test_batch_detects_war_cycle():
+    """Shrinking BOTH channels of a burst ping-pong inverts the recorded
+    event order (a genuine WAR cycle across two FIFOs): the batch must
+    flag it, fall back, and reproduce the resulting deadlock."""
+    def burst_pingpong(n=8, depth=8):
+        prog = Program("burst_pingpong", declared_type="A")
+        cmd = prog.fifo("cmd", depth)
+        resp = prog.fifo("resp", depth)
+
+        @prog.module("ctrl")
+        def ctrl():
+            for i in range(n):
+                yield Write(cmd, i)
+            tot = 0
+            for _ in range(n):
+                tot += (yield Read(resp))
+            yield Emit("sum", tot)
+
+        @prog.module("proc")
+        def proc():
+            for _ in range(n):
+                v = yield Read(cmd)
+                yield Write(resp, 2 * v)
+
+        return prog
+
+    base = simulate(burst_pingpong())
+    D = np.array([(1, 1), (2, 2), (1, 8), (8, 1), (4, 4), (8, 8)])
+    out = resimulate_batch(base, D)
+    _assert_batch_exact(out, burst_pingpong, D, simulate(burst_pingpong()))
+    assert "cycle" in out.reasons[0] and "cycle" in out.reasons[1]
+    assert out.results[0].deadlock            # fallback finds the deadlock
+    assert out.ok[2:].all()                   # one roomy channel suffices
+
+
+def test_batch_no_fallback_mode():
+    base = simulate(producer_consumer(n=32, depth=4))
+    out = resimulate_batch(base, np.array([[1], [16]]), fallback=False)
+    for k in range(2):
+        if not out.ok[k]:
+            assert out.results[k] is None and out.cycles[k] == -1
+
+
+# -------------------------------------------------------------- backends
+def test_batch_reference_backend_agrees():
+    """The production Gauss-Seidel solver against the Jacobi oracle."""
+    base = simulate(skynet_like(items=32, depth=5))
+    rng = np.random.default_rng(3)
+    D = rng.integers(1, 10, size=(16, len(base.depths)))
+    out = resimulate_batch(base, D)
+    ref = resimulate_batch(base, D, backend="reference")
+    assert (out.ok == ref.ok).all()
+    assert (out.cycles == ref.cycles).all()
+    assert (out.status == ref.status).all()
+
+
+def test_batch_jax_backend_agrees():
+    """jax.vmap dense max-plus backend (Pallas interpret mode)."""
+    pytest.importorskip("jax")
+    base = simulate(producer_consumer(n=24, depth=3))
+    D = np.array([[1], [2], [4], [8]])
+    out = resimulate_batch(base, D, backend="numpy")
+    jx = resimulate_batch(base, D, backend="jax")
+    assert (out.ok == jx.ok).all()
+    assert (out.cycles == jx.cycles).all()
+
+
+# ------------------------------------------------------------- throughput
+def test_batch_speedup_256_configs():
+    """Acceptance: >= 256 skynet_like depth configs, batched >= 10x faster
+    than the resimulate() loop, every config's cycle count exact against a
+    from-scratch simulate()."""
+    import time
+
+    builder = lambda: skynet_like(items=128, depth=8)
+    base = simulate(builder())
+    rng = np.random.default_rng(0)
+    K = 256
+    D = rng.integers(4, 17, size=(K, len(base.depths)))
+    # warm the shared compiled-graph cache for both paths
+    resimulate(base, tuple(int(d) for d in D[0]))
+    resimulate_batch(base, D[:2])
+
+    t0 = time.perf_counter()
+    looped = [resimulate(base, tuple(int(d) for d in row), fallback=False)
+              for row in D]
+    t_loop = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out_nf = resimulate_batch(base, D, fallback=False)
+    t_batch = time.perf_counter() - t0
+    out = resimulate_batch(base, D)        # untimed: exercises fallback too
+
+    # config-for-config agreement with the looped path
+    for k, inc in enumerate(looped):
+        assert inc.ok == bool(out.ok[k]) == bool(out_nf.ok[k]), \
+            (k, out.reasons[k], inc.reason)
+        if inc.ok:
+            assert inc.result.cycles == out.cycles[k] == out_nf.cycles[k], k
+    # cycle counts exact against from-scratch simulation for EVERY config:
+    # reused ones from the shared fixpoint, violated ones via fallback
+    for k in range(K):
+        full = simulate(builder(), depths=tuple(int(d) for d in D[k]))
+        assert out.cycles[k] == full.cycles, (k, "reused" if out.ok[k]
+                                              else out.reasons[k])
+    speedup = t_loop / t_batch
+    assert speedup >= 10.0, (
+        f"batched DSE only {speedup:.1f}x over looped resimulate "
+        f"({t_loop*1e3:.0f} ms vs {t_batch*1e3:.0f} ms for {K} configs)")

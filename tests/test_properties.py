@@ -9,6 +9,9 @@ Invariants tested on randomized dataflow programs:
   4. Longest-path backends agree on random DAGs.
 """
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Delay, Emit, LightningSim, Program, Read, ReadNB,

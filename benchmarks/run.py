@@ -18,7 +18,7 @@ def main() -> None:
     from benchmarks.tables import (fig8_perfsim, fig8_speed_scaling,
                                    pipeline_table, table3_funcsim,
                                    table5_vs_decoupled, table6_batch_dse,
-                                   table6_incremental)
+                                   table6_incremental, table_trace_replay)
     rows = []
     rows += table3_funcsim()
     rows += fig8_perfsim()
@@ -26,6 +26,7 @@ def main() -> None:
     rows += table5_vs_decoupled()
     rows += table6_incremental()
     rows += table6_batch_dse()
+    rows += table_trace_replay()
     rows += pipeline_table()
     print("\n== CSV (name,us_per_call,derived) ==")
     for r in rows:

@@ -175,6 +175,47 @@ def table6_batch_dse() -> List[str]:
     return rows
 
 
+# ------------------------------------------------ Sec 5.1 trace compilation
+def table_trace_replay() -> List[str]:
+    """Initial simulation via trace-compiled replay vs the generator path
+    (core/trace.py, ISSUE 2 acceptance: >= 5x on skynet_like)."""
+    from repro.designs.typea import skynet_like
+
+    rows = []
+    print("\n== Sec 5.1: trace-compiled initial simulation vs generator ==")
+    print(f"{'design':22s} {'gen ms':>8s} {'trace ms':>9s} {'speedup':>8s} "
+          f"{'ops':>8s} {'stored':>7s} {'same?':>6s}")
+    cases = {
+        "skynet_like": lambda: skynet_like(),             # items=2048, d=24
+        "skynet_like_small": lambda: skynet_like(items=512, depth=12),
+        "flowgnn_like": lambda: TYPEA_DESIGNS["flowgnn_like"](
+            n_nodes=1024, layers=8),
+    }
+    for name, builder in cases.items():
+        # like-for-like: same best-of-2 timing discipline for both paths
+        gen, t_gen = _timeit(lambda: simulate(builder(), trace="never"),
+                             repeats=2)
+        tr, t_tr = _timeit(lambda: simulate(builder(), trace="always"),
+                           repeats=2)
+        same = (gen.outputs == tr.outputs and gen.cycles == tr.cycles
+                and gen.deadlock == tr.deadlock)
+        rec = tr.graph._trace            # periodized op streams
+        spd = t_gen / t_tr
+        print(f"{name:22s} {t_gen*1e3:7.1f} {t_tr*1e3:8.1f} {spd:7.1f}x "
+              f"{rec.n_ops:8d} {rec.n_stored:7d} {'YES' if same else 'NO':>6s}")
+        rows.append(f"trace_replay/{name},{t_tr*1e6:.0f},"
+                    f"speedup_vs_generator={spd:.1f};exact_match={same}")
+        if name == "skynet_like":
+            BENCH_CORE.update({
+                "initial_sim_generator_us": t_gen * 1e6,
+                "initial_sim_trace_us": t_tr * 1e6,
+                "trace_replay_speedup_initial": spd,
+                "trace_ops": rec.n_ops,
+                "trace_ops_stored_after_periodization": rec.n_stored,
+            })
+    return rows
+
+
 # -------------------------------------------------- Fig 8(b) scaling regime
 def fig8_speed_scaling() -> List[str]:
     """Event-driven vs cycle-stepped scaling: speedup grows with idle cycles

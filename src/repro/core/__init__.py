@@ -5,7 +5,11 @@ Public API:
 
     from repro.core import (Program, Read, Write, ReadNB, WriteNB, Empty,
                             Full, Delay, Emit, simulate, simulate_rtl,
-                            LightningSim, csim, resimulate, classify)
+                            simulate_traced, LightningSim, csim, resimulate,
+                            resimulate_batch, classify)
+
+See docs/architecture.md for the module map (which paper section each file
+implements) and docs/api.md for the full public-API reference.
 """
 from .engine import OmniSim, simulate
 from .events import (Constraint, DeadlockError, NodeKind, Query, RequestType,
@@ -20,6 +24,9 @@ from .program import (Delay, Emit, Empty, Fifo, Full, Module, Op, Program,
                       Read, ReadNB, SimResult, Write, WriteNB)
 from .rtlsim import simulate_rtl
 from .taxonomy import Classification, classify, classify_dynamic
+from .trace import (CompiledTrace, ModuleTrace, RecordedTrace, TraceSimGraph,
+                    TraceUnsupported, compile_trace, record_trace,
+                    simulate_traced)
 
 __all__ = [
     "OmniSim", "simulate", "simulate_rtl", "LightningSim", "csim",
@@ -31,4 +38,6 @@ __all__ = [
     "to_dense_blocks", "Constraint", "DeadlockError", "Query", "RequestType",
     "NodeKind", "SimStats", "UnsupportedDesignError", "CSimCrash",
     "classify_dynamic",
+    "TraceUnsupported", "RecordedTrace", "ModuleTrace", "CompiledTrace",
+    "TraceSimGraph", "record_trace", "compile_trace", "simulate_traced",
 ]

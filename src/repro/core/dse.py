@@ -11,8 +11,11 @@ lifted to a batch of solves):
 
   1. regenerate the depth-dependent WAR edges for ALL K configs as stacked
      index/mask arrays (the static SEQ+RAW skeleton is shared via
-     :class:`~repro.core.incremental.CompiledGraph`, and per-(FIFO, depth)
-     columns are cached — depth values repeat heavily across a sweep);
+     :class:`~repro.core.incremental.CompiledGraph` — for trace-compiled
+     base runs it was built directly from the op trace at initial-sim
+     time, so no Python graph object is ever walked — and per-(FIFO,
+     depth) columns are cached: depth values repeat heavily across a
+     sweep);
   2. run the chain-decomposed longest-path fixpoint with a leading batch
      axis — one ``np.maximum.accumulate`` per module chain over the whole
      batch instead of K Python loops.  The production solver seeds every

@@ -17,9 +17,10 @@ exactly:
     query is resolved *false*, which is sound because every uncommitted
     event must eventually commit at or after that query's cycle (paper
     Sec. 7.1, our proof in core/engine.py::_force_earliest);
-  ❺ resolved tasks resume; on global completion, finalization recomputes
-    all node times from the graph and verifies them against the eagerly
-    computed times.
+  ❺ resolved tasks resume; on global completion the eagerly maintained node
+    times are the finalized result (``verify_finalization=True`` re-derives
+    them from the graph by longest path and asserts equality — opt-in since
+    the PR 1 hot-path overhaul; tests enable it).
 
 Deadlock: quiescence with no pending queries and no satisfiable blocked
 access ⇒ true design-level deadlock, reported immediately with the stall
@@ -28,6 +29,16 @@ cycle (paper Sec. 7.1).
 Determinism: the ready list is serviced in module order by default;
 ``shuffle_seed`` randomizes servicing order to demonstrate that results are
 schedule-independent — the property the paper fights OS scheduling for.
+
+Trace compilation (paper Sec. 5.1, PR 2): for blocking-only runs the
+per-op generator dispatch below is the dominant cost of the *initial*
+simulation, so :func:`simulate` first tries ``core/trace.py`` — record each
+module's op stream once, compile it to flat numpy op arrays, and replay by
+array-level dispatch (chain cummax + cross-edge fixpoint) instead of
+resuming generators.  Designs with live NB accesses / status probes, true
+deadlocks, or SPSC violations raise ``TraceUnsupported`` and fall back to
+the generator loop in this file, which remains the semantics reference for
+every design class (Type A/B/C).
 """
 from __future__ import annotations
 
@@ -48,6 +59,9 @@ from .program import (Delay, Emit, Empty, Full, Op, Program, Read, ReadNB,
 
 
 class TaskState(Enum):
+    """Lifecycle of a Func Sim task (paper Sec. 6.2 ❸: a task pauses on an
+    unresolvable query or a blocked blocking access)."""
+
     READY = 0
     PAUSED_QUERY = 1
     PAUSED_READ = 2
@@ -76,7 +90,17 @@ SEQ, RAW, WAR = 0, 1, 2
 
 
 class OmniSim:
-    """Coupled Func/Perf simulation engine."""
+    """Coupled Func/Perf simulation engine (paper Sec. 6.2).
+
+    One instance = one run: module generators drive FIFO accesses, each
+    committed access becomes a simulation-graph node stamped with its
+    hardware **cycle**, and per-FIFO :class:`~repro.core.fifo.FifoTable`\\ s
+    answer the Table-2 resolution questions.  The finished instance is
+    carried on ``SimResult.graph`` and is the substrate for incremental
+    (``core/incremental.py``) and batched (``core/dse.py``)
+    re-simulation — the trace replay (``core/trace.py``) populates an
+    identical end state without running this event loop.
+    """
 
     def __init__(self, program: Program, shuffle_seed: Optional[int] = None,
                  max_steps: int = 50_000_000, verify_finalization: bool = False):
@@ -150,6 +174,9 @@ class OmniSim:
 
     # ------------------------------------------------------------------- run
     def run(self) -> SimResult:
+        """Execute the protocol ❶-❺ of the module docstring to completion
+        (or deadlock) and return the finalized :class:`SimResult`, whose
+        ``cycles`` is the max node commit cycle."""
         # ❶ invoke all tasks
         for task, mod in zip(self.tasks, self.program.modules):
             task.gen = mod.fn()
@@ -209,6 +236,8 @@ class OmniSim:
         return self._finish()
 
     def _current_horizon(self) -> int:
+        """Latest known cycle (committed nodes + live task clocks) — the
+        stall cycle reported on deadlock (paper Sec. 7.1)."""
         h = 0
         for n in self.graph.nodes:
             if n.time > h:
@@ -220,6 +249,10 @@ class OmniSim:
 
     # ----------------------------------------------------------- task driving
     def _run_until_pause(self, task: _Task) -> None:
+        """Resume ``task``'s generator and execute ops until it pauses
+        (query/blocked access) or terminates.  This per-op dispatch is the
+        generator path's hot loop — the cost the trace-compiled replay
+        (``core/trace.py``) eliminates for blocking-only designs."""
         self.stats.resumes += 1
         while True:
             self._steps += 1
@@ -383,6 +416,8 @@ class OmniSim:
 
     # --------------------------------------------------------- quiescence ops
     def _resume_blocked(self) -> bool:
+        """At quiescence, retry every blocked blocking access whose target
+        event has since committed; True if any task progressed."""
         progressed = False
         for task in self.tasks:
             if task.state is TaskState.PAUSED_READ:
@@ -493,8 +528,47 @@ class OmniSim:
 
 
 def simulate(program: Program, depths=None, shuffle_seed: Optional[int] = None,
-             max_steps: int = 50_000_000) -> SimResult:
-    """Run the OmniSim engine on ``program`` (optionally overriding depths)."""
+             max_steps: int = 50_000_000, trace: str = "auto") -> SimResult:
+    """Run the OmniSim engine on ``program`` (optionally overriding depths).
+
+    ``trace`` selects the initial-simulation strategy:
+
+      * ``"auto"`` (default) — try the trace-compiled replay
+        (``core/trace.py``: generators entered once, op arrays replayed by
+        vectorized dispatch); fall back to the generator engine when the
+        design's control flow is cycle-dependent (live NB accesses/status
+        probes), the design deadlocks, or an SPSC violation must be
+        reported.  Results are identical either way (tests pin equality).
+      * ``"always"`` — trace replay or raise
+        :class:`~repro.core.trace.TraceUnsupported`.
+      * ``"never"`` — generator engine only (the semantics reference; also
+        used with ``shuffle_seed`` to exercise scheduling independence).
+
+    A non-``None`` ``shuffle_seed`` implies the generator path: the point
+    of shuffling is to randomize actual task servicing order, which the
+    schedule-free replay has no analogue of (``trace="always"`` plus a
+    seed is contradictory and raises ``ValueError``).
+
+    Module bodies must be *re-runnable*: ``mod.fn()`` may be invoked more
+    than once per Program (an aborted trace recording falls back to the
+    generator engine, and the incremental/DSE fallbacks re-simulate from
+    scratch), so bodies must not mutate shared closure state or perform
+    external side effects — the same purity the DSL has always required
+    of ``resimulate``'s fallback path.
+    """
+    if trace not in ("auto", "always", "never"):
+        raise ValueError(f"trace must be 'auto'|'always'|'never', got {trace!r}")
+    if trace == "always" and shuffle_seed is not None:
+        raise ValueError("trace='always' is incompatible with shuffle_seed: "
+                         "the schedule-free replay has no servicing order "
+                         "to shuffle")
     if depths is not None:
         program.with_depths(depths)
+    if trace != "never" and shuffle_seed is None:
+        from . import trace as _trace
+        try:
+            return _trace.simulate_traced(program, max_steps=max_steps)
+        except _trace.TraceUnsupported:
+            if trace == "always":
+                raise
     return OmniSim(program, shuffle_seed=shuffle_seed, max_steps=max_steps).run()

@@ -66,7 +66,10 @@ class Node:
     time: int                   # hardware cycle at which the event commits
     fifo: int = -1              # FIFO id (or -1)
     seq: int = -1               # 1-based sequence number of this access on its FIFO
-    # incoming edges: list of (src node idx, weight). src < idx always holds.
+    # incoming edges: list of (src node idx, weight).  src < idx holds for
+    # engine-built graphs (creation order is topological); trace-replayed
+    # graphs (core/trace.py) are chain-major, so use order-insensitive
+    # longest-path backends (level-scheduled or fixpoint) on them.
     preds: list = field(default_factory=list)
 
     def add_edge(self, src: int, weight: int) -> None:

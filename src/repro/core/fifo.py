@@ -30,6 +30,16 @@ import numpy as np
 
 
 class FifoTable:
+    """One FIFO's committed read/write event tables (paper Fig. 7, (D)).
+
+    Units: ``*_times`` are hardware **cycles** (1-based commit cycles);
+    sequence numbers (``w``/``r`` arguments) are 1-based **event** counts on
+    this FIFO's side.  Node indices refer to the simulation graph.  Filled
+    one commit at a time by the generator engine, or wholesale (vectorized)
+    by the trace replay (``core/trace.py``) — both end states are
+    identical.
+    """
+
     __slots__ = ("fid", "name", "depth", "values",
                  "_w_nodes", "_w_times", "_r_nodes", "_r_times",
                  "_nw", "_nr")
@@ -83,6 +93,8 @@ class FifoTable:
         return self._nw
 
     def commit_read(self, node_idx: int, time: int) -> Any:
+        """Record the next read committing at cycle ``time``; returns the
+        payload popped from the in-flight value queue."""
         n = self._nr
         if n == len(self._r_nodes):
             self._r_nodes = np.concatenate([self._r_nodes, self._r_nodes])
@@ -95,10 +107,12 @@ class FifoTable:
     # -- counters --------------------------------------------------------------
     @property
     def n_writes(self) -> int:
+        """Committed write count (events so far; the next write is #n+1)."""
         return self._nw
 
     @property
     def n_reads(self) -> int:
+        """Committed read count (events so far; the next read is #n+1)."""
         return self._nr
 
     # -- Table 2 resolution ----------------------------------------------------
@@ -144,6 +158,9 @@ class FifoTable:
         return None
 
     def earliest_read_time(self, idx0: int) -> Optional[int]:
+        """Commit cycle of the read at 0-based index ``idx0``, if known —
+        the WAR target lookup of paper Table 2 (w-th write waits on the
+        (w-S)-th read)."""
         if idx0 < self._nr:
             return int(self._r_times[idx0])
         return None

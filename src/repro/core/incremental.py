@@ -23,6 +23,13 @@ The engine-side compiled-graph cache (:class:`CompiledGraph`, built once by
 LightningSimV2's compile-once/re-solve-many design: every later
 ``resimulate``/``resimulate_batch`` call over the same base run shares it —
 only the WAR regeneration and the fixpoint depend on the candidate depths.
+When the base run came from the trace-compiled replay (``core/trace.py``),
+the cache is pre-built directly from the op trace at initial-simulation
+time (``trace.to_compiled_graph``), so even the *first* incremental call
+never re-interprets the Python node objects.
+
+Units: all times are hardware cycles; ``elapsed_s`` fields are wall-clock
+seconds; sequence numbers are 1-based per-FIFO event counts (Table 2).
 """
 from __future__ import annotations
 
@@ -42,11 +49,19 @@ NEGI = np.int64(-(1 << 60))
 
 @dataclass
 class IncrementalOutcome:
+    """Verdict of one :func:`resimulate` call (paper Sec. 7.2 / Table 6).
+
+    ``ok`` means every recorded constraint held under the new depths and
+    the graph was reused; otherwise ``reason`` explains the violation and
+    ``result`` is the fallback full re-simulation (or None with
+    ``fallback=False``).  ``elapsed_s`` is wall-clock seconds.
+    """
+
     ok: bool                       # constraints satisfied → graph reused
     reason: str
     elapsed_s: float
-    result: Optional[SimResult]    # reused-graph result (ok) or None
-    violated: int = 0
+    result: Optional[SimResult]    # reused (ok) or fallback result
+    violated: int = 0              # number of flipped constraint outcomes
 
 
 @dataclass
@@ -85,6 +100,10 @@ def compile_graph(engine: OmniSim) -> CompiledGraph:
     per candidate depth vector.  Subsequent incremental/batched calls are
     fully vectorized against these arrays (the engine-side analogue of
     LightningSimV2's compiled-graph reuse).
+
+    Trace-compiled runs (``core/trace.py``) install a cache built straight
+    from the op arrays at initial-simulation time, so this walk over the
+    Python node objects only ever happens for generator-path runs.
     """
     cached = getattr(engine, "_incr_cache", None)
     if cached is not None:

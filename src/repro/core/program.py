@@ -10,7 +10,12 @@ default, and extra latency is expressed with ``Delay`` (this mirrors the
 dynamic-stage unrolling of the paper's Sec. 5.1).
 
 A module body is a Python *generator function*; it yields ops and receives
-results (read values, NB success flags) via ``send``.  Example::
+results (read values, NB success flags) via ``send``.  Bodies must be
+**pure and re-runnable**: the framework may invoke ``fn()`` more than once
+per Program (trace recording with generator fallback, incremental/DSE
+fallback re-simulation, the RTL oracle), so a body must not mutate state
+shared across invocations (e.g. popping from a closure list) or perform
+external side effects.  Example::
 
     prog = Program("producer_consumer")
     data = prog.fifo("data", depth=2)

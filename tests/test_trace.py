@@ -1,0 +1,382 @@
+"""Trace compilation (core/trace.py): compiled-vs-generator exactness.
+
+The contract (ISSUE 2 / paper Sec. 5.1): ``simulate(p, trace="auto")`` must
+produce a ``SimResult`` indistinguishable from the generator engine's on
+EVERY design — same outputs, cycles, deadlock report, FIFO tables, graph
+times and downstream incremental/DSE behavior — replaying compiled op
+arrays where the design allows it and falling back to the generator path
+where control flow is cycle-dependent.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (classify, resimulate, resimulate_batch, simulate,
+                        longest_path_numpy)
+from repro.core.program import Delay, Emit, Program, Read, ReadNB, Write
+from repro.core.trace import (TraceUnsupported, compile_trace, record_trace,
+                              simulate_traced)
+from repro.designs.paper import PAPER_DESIGNS
+from repro.designs.typea import TYPEA_DESIGNS, producer_consumer, skynet_like
+
+# reduced sizes: exactness is size-independent, keep the suite fast
+_PAPER_SMALL = {
+    "fig4_ex2": lambda: PAPER_DESIGNS["fig4_ex2"](n=64),
+    "fig4_ex3": lambda: PAPER_DESIGNS["fig4_ex3"](n=64),
+    "fig4_ex4a": lambda: PAPER_DESIGNS["fig4_ex4a"](n=64),
+    "fig4_ex4a_d": lambda: PAPER_DESIGNS["fig4_ex4a_d"](n=64),
+    "fig4_ex4b": lambda: PAPER_DESIGNS["fig4_ex4b"](n=64),
+    "fig4_ex4b_d": lambda: PAPER_DESIGNS["fig4_ex4b_d"](n=64),
+    "fig4_ex5": lambda: PAPER_DESIGNS["fig4_ex5"](n=64),
+    "fig2_timer": lambda: PAPER_DESIGNS["fig2_timer"](n=64),
+    "deadlock": lambda: PAPER_DESIGNS["deadlock"](n=8),
+    "branch": lambda: PAPER_DESIGNS["branch"](prog_len=128),
+    "multicore": lambda: PAPER_DESIGNS["multicore"](cores=4, prog_len=32),
+}
+_TYPEA_SMALL = {
+    "producer_consumer": lambda: TYPEA_DESIGNS["producer_consumer"](n=48),
+    "fir_filter": lambda: TYPEA_DESIGNS["fir_filter"](n=64),
+    "window_conv": lambda: TYPEA_DESIGNS["window_conv"](rows=12, cols=12),
+    "matmul_stream": lambda: TYPEA_DESIGNS["matmul_stream"](m=6, k=6, n=6),
+    "sqrt_pipe": lambda: TYPEA_DESIGNS["sqrt_pipe"](n=48),
+    "parallel_loops": lambda: TYPEA_DESIGNS["parallel_loops"](n=48),
+    "nested_loops": lambda: TYPEA_DESIGNS["nested_loops"](outer=8, inner=8),
+    "accumulators": lambda: TYPEA_DESIGNS["accumulators"](n=48),
+    "vector_add_stream": lambda: TYPEA_DESIGNS["vector_add_stream"](n=96),
+    "merge_sort_staged": lambda: TYPEA_DESIGNS["merge_sort_staged"](log_n=5),
+    "huffman_pipe": lambda: TYPEA_DESIGNS["huffman_pipe"](n=64),
+    "flowgnn_like": lambda: TYPEA_DESIGNS["flowgnn_like"](n_nodes=32),
+    "skynet_like": lambda: TYPEA_DESIGNS["skynet_like"](items=48, depth=6),
+    "latency_pipe": lambda: TYPEA_DESIGNS["latency_pipe"](items=24, ii=16),
+}
+
+
+def _assert_equal_results(r_gen, r_tr, name=""):
+    assert r_tr.outputs == r_gen.outputs, name
+    assert r_tr.cycles == r_gen.cycles, name
+    assert r_tr.deadlock == r_gen.deadlock, name
+    assert r_tr.deadlock_cycle == r_gen.deadlock_cycle, name
+    assert r_tr.depths == r_gen.depths, name
+
+
+# --------------------------------------------------------- exactness sweeps
+@pytest.mark.parametrize("name", sorted(_TYPEA_SMALL))
+def test_typea_compiled_equals_generator(name):
+    """Blocking-only designs must take the compiled path and match exactly —
+    including graph shape, times multiset and FIFO-table contents."""
+    b = _TYPEA_SMALL[name]
+    r_gen = simulate(b(), trace="never")
+    r_tr = simulate(b(), trace="auto")
+    assert r_tr.engine == "omnisim-trace", name
+    _assert_equal_results(r_gen, r_tr, name)
+    g1, g2 = r_gen.graph.graph, r_tr.graph.graph
+    assert g1.n_nodes == g2.n_nodes and g1.n_edges == g2.n_edges
+    assert r_gen.stats.nodes == r_tr.stats.nodes      # START excluded in both
+    assert r_gen.stats.edges == r_tr.stats.edges
+    assert sorted(g1.times()) == sorted(g2.times())
+    for t1, t2 in zip(r_gen.graph.fifos, r_tr.graph.fifos):
+        np.testing.assert_array_equal(np.sort(t1.write_times),
+                                      np.sort(t2.write_times))
+        np.testing.assert_array_equal(np.sort(t1.read_times),
+                                      np.sort(t2.read_times))
+        assert list(t1.values) == list(t2.values)   # leftover payloads
+
+
+@pytest.mark.parametrize("name", sorted(_PAPER_SMALL))
+def test_taxonomy_compiled_equals_generator(name):
+    """Every taxonomy design (cyclic deps, NB accesses, deadlocks): auto
+    mode must match the generator engine bit-for-bit, whether it compiled
+    or fell back."""
+    b = _PAPER_SMALL[name]
+    r_gen = simulate(b(), trace="never")
+    r_tr = simulate(b(), trace="auto")
+    _assert_equal_results(r_gen, r_tr, name)
+    if name in ("fig4_ex3",):        # cyclic but blocking-only: must compile
+        assert r_tr.engine == "omnisim-trace"
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3, 7, 100])
+@pytest.mark.parametrize("delay", [0, 1, 3])
+def test_depth_delay_sweep_compiled(depth, delay):
+    def build():
+        prog = Program("pc", declared_type="A")
+        data = prog.fifo("data", depth)
+
+        @prog.module("producer")
+        def producer():
+            for i in range(1, 17):
+                yield Write(data, i)
+
+        @prog.module("consumer")
+        def consumer():
+            total = 0
+            for _ in range(16):
+                total += (yield Read(data))
+                if delay:
+                    yield Delay(delay)
+            yield Emit("sum", total)
+
+        return prog
+
+    _assert_equal_results(simulate(build(), trace="never"),
+                          simulate(build(), trace="always"))
+
+
+# ------------------------------------------------------- fallback behaviour
+def test_data_dependent_control_flow_falls_back():
+    """An NB outcome steering control flow cannot be trace-compiled: 'always'
+    raises, 'auto' silently uses the generator path with the same result."""
+    def build():
+        prog = Program("poll", declared_type="B")
+        f = prog.fifo("f", 2)
+
+        @prog.module("p")
+        def p():
+            yield Delay(10)
+            yield Write(f, 42)
+
+        @prog.module("c")
+        def c():
+            polls = 0
+            while True:
+                ok, v = yield ReadNB(f)
+                polls += 1
+                if ok:
+                    break
+            yield Emit("polls", polls)
+
+        return prog
+
+    with pytest.raises(TraceUnsupported):
+        simulate(build(), trace="always")
+    r = simulate(build(), trace="auto")
+    assert r.engine == "omnisim"
+    _assert_equal_results(simulate(build(), trace="never"), r)
+
+
+def test_deadlock_falls_back_with_exact_stall_cycle():
+    """Cyclic blocking wait: recording detects the untimed-KPN deadlock and
+    the generator engine reports the exact stall cycle and blocked set."""
+    b = _PAPER_SMALL["deadlock"]
+    with pytest.raises(TraceUnsupported):
+        simulate_traced(b())
+    r = simulate(b(), trace="auto")
+    assert r.deadlock and r.engine == "omnisim"
+    assert set(r.outputs["__deadlock__"]) == {"task_a", "task_b"}
+
+
+def test_depth_induced_deadlock_falls_back():
+    """A design that only deadlocks because a FIFO is too small: the trace
+    compiles, but WAR generation detects the structural deadlock (missing
+    target read) and auto mode reproduces the generator report."""
+    def leftover(depth):
+        prog = Program("leftover", declared_type="A")
+        d = prog.fifo("d", depth)
+
+        @prog.module("p")
+        def p():
+            for i in range(8):
+                yield Write(d, i)
+
+        @prog.module("c")
+        def c():
+            tot = 0
+            for _ in range(4):
+                tot += (yield Read(d))
+            yield Emit("sum", tot)
+
+        return prog
+
+    assert simulate(leftover(8)).engine == "omnisim-trace"
+    with pytest.raises(TraceUnsupported):
+        simulate_traced(leftover(3))
+    _assert_equal_results(simulate(leftover(3), trace="never"),
+                          simulate(leftover(3), trace="auto"))
+
+
+def test_war_cycle_deadlock_falls_back():
+    """Burst ping-pong with both channels at depth 1: regenerated WAR edges
+    form a cycle — the replay refuses and the engine finds the deadlock."""
+    def burst(depth):
+        prog = Program("burst", declared_type="A")
+        cmd = prog.fifo("cmd", depth)
+        resp = prog.fifo("resp", depth)
+
+        @prog.module("ctrl")
+        def ctrl():
+            for i in range(8):
+                yield Write(cmd, i)
+            tot = 0
+            for _ in range(8):
+                tot += (yield Read(resp))
+            yield Emit("sum", tot)
+
+        @prog.module("proc")
+        def proc():
+            for _ in range(8):
+                v = yield Read(cmd)
+                yield Write(resp, 2 * v)
+
+        return prog
+
+    assert simulate(burst(8)).engine == "omnisim-trace"
+    with pytest.raises(TraceUnsupported):
+        simulate_traced(burst(1))
+    r = simulate(burst(1), trace="auto")
+    assert r.deadlock
+    _assert_equal_results(simulate(burst(1), trace="never"), r)
+
+
+def test_spsc_violation_still_raises_engine_assertion():
+    """Two readers on one FIFO: the recorder defers, and the engine's
+    endpoint check raises the same AssertionError as before."""
+    prog = Program("mpmc", declared_type="A")
+    f = prog.fifo("f", 2)
+
+    @prog.module("p")
+    def p():
+        for i in range(4):
+            yield Write(f, i)
+
+    @prog.module("c1")
+    def c1():
+        yield Read(f)
+
+    @prog.module("c2")
+    def c2():
+        yield Read(f)
+
+    with pytest.raises(AssertionError, match="SPSC"):
+        simulate(prog, trace="auto")
+
+
+def test_spsc_drain_while_parked_falls_back():
+    """A second reader draining a FIFO while the first is parked on it must
+    fall back (not crash) and surface the engine's SPSC diagnostic."""
+    prog = Program("mpmc2", declared_type="A")
+    f = prog.fifo("f", 2)
+    g2 = prog.fifo("g2", 2)
+
+    @prog.module("ra")
+    def ra():
+        yield Read(f)                    # parks on empty f
+
+    @prog.module("w")
+    def w():
+        yield Write(g2, 1)
+        yield Write(f, 2)
+
+    @prog.module("rb")
+    def rb():
+        yield Read(g2)
+        yield Read(f)                    # drains f before ra wakes
+
+    with pytest.raises(AssertionError, match="SPSC"):
+        simulate(prog, trace="auto")
+
+
+def test_shuffle_seed_uses_generator_path():
+    r = simulate(producer_consumer(n=16), shuffle_seed=3)
+    assert r.engine == "omnisim"
+
+
+def test_trace_always_with_shuffle_seed_is_an_error():
+    """'always' promises replay-or-raise; a shuffle seed (which only the
+    generator scheduler honors) contradicts it."""
+    with pytest.raises(ValueError, match="shuffle_seed"):
+        simulate(producer_consumer(n=8), shuffle_seed=1, trace="always")
+    with pytest.raises(ValueError, match="trace"):
+        simulate(producer_consumer(n=8), trace="sometimes")
+
+
+# ----------------------------------------------------- recorded-trace shape
+def test_record_trace_arrays():
+    rec = record_trace(producer_consumer(n=8, depth=2))
+    assert [m.name for m in rec.modules] == ["producer", "consumer"]
+    prod, cons = rec.modules
+    assert prod.n_ops == 8 and (prod.kind == 1).all()       # OP_WRITE
+    assert cons.n_ops == 8 and (cons.kind == 0).all()       # OP_READ
+    assert rec.outputs == {"sum": sum(range(1, 9))}
+    ct = compile_trace(rec, 1)
+    assert ct.n == 8 + 8 + 4                                # ops + START/END
+    assert len(ct.raw_dst) == 8                             # one RAW per read
+    np.testing.assert_array_equal(ct.fifo_wmod, [0])
+    np.testing.assert_array_equal(ct.fifo_rmod, [1])
+
+
+def test_periodization_roundtrip():
+    """Steady-state loops are re-rolled losslessly; skynet compresses by
+    orders of magnitude."""
+    rec = record_trace(skynet_like(items=128, depth=8))
+    full = [m.expand() for m in rec.modules]
+    rec.periodize()
+    assert rec.n_stored < rec.n_ops / 20
+    for m, (k, f, g) in zip(rec.modules, full):
+        k2, f2, g2 = m.expand()
+        np.testing.assert_array_equal(k, k2)
+        np.testing.assert_array_equal(f, f2)
+        np.testing.assert_array_equal(g, g2)
+
+
+def test_trace_graph_csr_and_nodes():
+    """TraceSimGraph must satisfy the SimGraph read contract: CSR longest
+    path reproduces the eager times, and node materialization feeds the
+    taxonomy classifier."""
+    r = simulate(skynet_like(items=24, depth=4))
+    assert r.engine == "omnisim-trace"
+    g = r.graph.graph
+    indptr, src, wgt, base = g.to_csr()
+    np.testing.assert_array_equal(longest_path_numpy(indptr, src, wgt, base),
+                                  g.times())
+    c = classify(skynet_like(items=24, depth=4), r)
+    assert c.dtype == "A" and not c.has_nonblocking
+
+
+def test_dead_probes_compile():
+    """Unused Empty/Full probes are statically dead (paper Sec. 7.3.2):
+    they cost one cycle and do not force a generator fallback."""
+    from repro.core.program import Full
+
+    def build():
+        prog = Program("deadprobe", declared_type="A")
+        f = prog.fifo("f", 2)
+
+        @prog.module("p")
+        def p():
+            for i in range(4):
+                yield Full(f, used=False)
+                yield Write(f, i)
+
+        @prog.module("c")
+        def c():
+            total = 0
+            for _ in range(4):
+                total += (yield Read(f))
+            yield Emit("total", total)
+
+        return prog
+
+    r = simulate(build(), trace="always")
+    assert r.stats.skipped_probes == 4
+    _assert_equal_results(simulate(build(), trace="never"), r)
+
+
+# ------------------------------------------- downstream incremental / DSE
+def test_incremental_from_trace_result_matches_generator_base():
+    """resimulate()/resimulate_batch() on a trace-compiled base must agree
+    verdict-for-verdict and cycle-for-cycle with a generator-path base —
+    the CompiledGraph is built directly from the trace."""
+    builder = lambda: skynet_like(items=48, depth=6)
+    base_tr = simulate(builder(), trace="always")
+    base_gen = simulate(builder(), trace="never")
+    assert getattr(base_tr.graph, "_incr_cache", None) is not None
+    rng = np.random.default_rng(11)
+    D = rng.integers(1, 13, size=(16, len(base_tr.depths)))
+    out_tr = resimulate_batch(base_tr, D)
+    out_gen = resimulate_batch(base_gen, D)
+    np.testing.assert_array_equal(out_tr.ok, out_gen.ok)
+    np.testing.assert_array_equal(out_tr.cycles, out_gen.cycles)
+    np.testing.assert_array_equal(out_tr.status, out_gen.status)
+    inc = resimulate(base_tr, tuple(int(x) for x in D[0]))
+    full = simulate(builder(), depths=tuple(int(x) for x in D[0]),
+                    trace="never")
+    assert inc.result.cycles == full.cycles

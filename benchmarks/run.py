@@ -1,38 +1,58 @@
 """Benchmark harness: one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run                   # full suite
+    PYTHONPATH=src python -m benchmarks.run --quick           # smoke
+    PYTHONPATH=src python -m benchmarks.run --quick --out P   # route output
 
 Prints human-readable tables followed by ``name,us_per_call,derived`` CSV,
-and writes the core-engine perf numbers (us/config for looped vs batched
-incremental re-simulation) to ``BENCH_core.json`` so future PRs have a
-machine-readable trajectory to compare against.
+and writes the core-engine perf numbers (incremental/batched
+re-simulation, trace-compiled and hybrid segmented initial simulation) to
+``BENCH_core.json`` so future PRs have a machine-readable trajectory to
+compare against.
+
+``--quick`` runs only the three key-producing benchmarks at reduced sizes —
+every required key is still written (tests/test_bench_schema.py validates
+the schema), but the values are not comparable with the full-size
+trajectory, so quick output defaults to ``BENCH_core.quick.json`` (or
+``--out PATH``) instead of overwriting the committed file.
 """
 from __future__ import annotations
 
 import json
 import os
+import sys
 
 
-def main() -> None:
+def main(quick: bool = False, out: str = None) -> None:
     from benchmarks import tables
+    tables.QUICK = quick
     from benchmarks.tables import (fig8_perfsim, fig8_speed_scaling,
                                    pipeline_table, table3_funcsim,
                                    table5_vs_decoupled, table6_batch_dse,
-                                   table6_incremental, table_trace_replay)
+                                   table6_incremental, table_hybrid_replay,
+                                   table_trace_replay)
     rows = []
-    rows += table3_funcsim()
-    rows += fig8_perfsim()
-    rows += fig8_speed_scaling()
-    rows += table5_vs_decoupled()
-    rows += table6_incremental()
+    if not quick:
+        rows += table3_funcsim()
+        rows += fig8_perfsim()
+        rows += fig8_speed_scaling()
+        rows += table5_vs_decoupled()
+        rows += table6_incremental()
     rows += table6_batch_dse()
     rows += table_trace_replay()
-    rows += pipeline_table()
+    rows += table_hybrid_replay()
+    if not quick:
+        rows += pipeline_table()
     print("\n== CSV (name,us_per_call,derived) ==")
     for r in rows:
         print(r)
-    out = os.path.join(os.path.dirname(os.path.dirname(
-        os.path.abspath(__file__))), "BENCH_core.json")
+    if out is None:
+        # quick numbers come from reduced sizes and are not comparable with
+        # the committed trajectory — keep them out of BENCH_core.json unless
+        # the caller routes them explicitly with --out
+        name = "BENCH_core.quick.json" if quick else "BENCH_core.json"
+        out = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), name)
     with open(out, "w") as f:
         json.dump(tables.BENCH_CORE, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -40,4 +60,11 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    argv = sys.argv[1:]
+    out_path = None
+    if "--out" in argv:
+        i = argv.index("--out")
+        if i + 1 >= len(argv):
+            sys.exit("usage: python -m benchmarks.run [--quick] [--out PATH]")
+        out_path = argv[i + 1]
+    main(quick="--quick" in argv, out=out_path)

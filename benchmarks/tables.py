@@ -18,6 +18,12 @@ from repro.designs import PAPER_DESIGNS, TYPEA_DESIGNS
 # trajectory to compare against
 BENCH_CORE: Dict[str, float] = {}
 
+# ``benchmarks/run.py --quick`` sets this: reduced design sizes, fewer
+# repeats — every BENCH_CORE key is still produced (the schema test in
+# tests/test_bench_schema.py relies on that), the values just carry more
+# noise.
+QUICK = False
+
 
 def _timeit(fn, repeats: int = 1):
     best = float("inf")
@@ -142,10 +148,11 @@ def table6_batch_dse() -> List[str]:
     from repro.designs.typea import skynet_like
     rows = []
     print("\n== Table 6 (batch): depth-batched DSE on skynet_like ==")
-    builder = lambda: skynet_like(items=512, depth=12)
+    items = 128 if QUICK else 512
+    builder = lambda: skynet_like(items=items, depth=12)
     base, t_full = _timeit(lambda: simulate(builder()))
     rng = np.random.default_rng(0)
-    K = 256
+    K = 64 if QUICK else 256
     D = rng.integers(4, 17, size=(K, len(base.depths)))
     resimulate(base, tuple(int(d) for d in D[0]))          # warm the cache
     resimulate_batch(base, D[:2])
@@ -186,10 +193,12 @@ def table_trace_replay() -> List[str]:
     print(f"{'design':22s} {'gen ms':>8s} {'trace ms':>9s} {'speedup':>8s} "
           f"{'ops':>8s} {'stored':>7s} {'same?':>6s}")
     cases = {
-        "skynet_like": lambda: skynet_like(),             # items=2048, d=24
-        "skynet_like_small": lambda: skynet_like(items=512, depth=12),
+        "skynet_like": (lambda: skynet_like(items=256, depth=12)) if QUICK
+        else (lambda: skynet_like()),                     # items=2048, d=24
+        "skynet_like_small": lambda: skynet_like(items=128 if QUICK else 512,
+                                                 depth=12),
         "flowgnn_like": lambda: TYPEA_DESIGNS["flowgnn_like"](
-            n_nodes=1024, layers=8),
+            n_nodes=128 if QUICK else 1024, layers=8),
     }
     for name, builder in cases.items():
         # like-for-like: same best-of-2 timing discipline for both paths
@@ -212,6 +221,64 @@ def table_trace_replay() -> List[str]:
                 "trace_replay_speedup_initial": spd,
                 "trace_ops": rec.n_ops,
                 "trace_ops_stored_after_periodization": rec.n_stored,
+            })
+    return rows
+
+
+# ------------------------------------------- Sec 5.1 hybrid (NB/probe) replay
+def table_hybrid_replay() -> List[str]:
+    """Initial simulation of *dynamic* (Type B/C) designs via the hybrid
+    segmented replay vs the generator engine (core/trace.py::simulate_hybrid,
+    ISSUE 3 acceptance: >= 3x on at least one Type B/C design).
+
+    Writes ``hybrid_replay_speedup_<design>`` keys into BENCH_core.json for
+    fig2_timer, branch, multicore and watchdog_pipe.  The paper designs are
+    query-dominated (every engine interprets most ops); watchdog_pipe is
+    the query-sparse profile where compiling the blocking segments pays.
+    """
+    from repro.designs.dynamic import watchdog_pipe
+
+    rows = []
+    print("\n== Sec 5.1 hybrid: segmented replay on dynamic designs ==")
+    print(f"{'design':16s} {'gen ms':>8s} {'hybrid ms':>10s} {'speedup':>8s} "
+          f"{'ops':>8s} {'queries':>8s} {'segs':>6s} {'same?':>6s}")
+    if QUICK:
+        cases = {
+            "fig2_timer": lambda: PAPER_DESIGNS["fig2_timer"](n=512),
+            "branch": lambda: PAPER_DESIGNS["branch"](prog_len=512),
+            "multicore": lambda: PAPER_DESIGNS["multicore"](cores=8,
+                                                            prog_len=64),
+            "watchdog_pipe": lambda: watchdog_pipe(items=512, stages=4),
+        }
+    else:
+        cases = {
+            "fig2_timer": lambda: PAPER_DESIGNS["fig2_timer"](),
+            "branch": lambda: PAPER_DESIGNS["branch"](),
+            "multicore": lambda: PAPER_DESIGNS["multicore"](),
+            "watchdog_pipe": lambda: watchdog_pipe(items=8192, stages=6),
+        }
+    for name, builder in cases.items():
+        gen, t_gen = _timeit(lambda: simulate(builder(), trace="never"),
+                             repeats=1 if QUICK else 2)
+        hyb, t_hyb = _timeit(lambda: simulate(builder(), trace="always"),
+                             repeats=1 if QUICK else 2)
+        assert hyb.engine == "omnisim-hybrid", name
+        same = (gen.outputs == hyb.outputs and gen.cycles == hyb.cycles
+                and gen.deadlock == hyb.deadlock)
+        info = hyb.graph._hybrid
+        spd = t_gen / t_hyb
+        print(f"{name:16s} {t_gen*1e3:7.1f} {t_hyb*1e3:9.1f} {spd:7.2f}x "
+              f"{info['ops']:8d} {info['queries']:8d} {info['segments']:6d} "
+              f"{'YES' if same else 'NO':>6s}")
+        rows.append(f"hybrid_replay/{name},{t_hyb*1e6:.0f},"
+                    f"speedup_vs_generator={spd:.2f};exact_match={same}")
+        BENCH_CORE[f"hybrid_replay_speedup_{name}"] = spd
+        if name == "watchdog_pipe":
+            BENCH_CORE.update({
+                "hybrid_sim_generator_us_watchdog_pipe": t_gen * 1e6,
+                "hybrid_sim_hybrid_us_watchdog_pipe": t_hyb * 1e6,
+                "hybrid_queries_watchdog_pipe": info["queries"],
+                "hybrid_ops_watchdog_pipe": info["ops"],
             })
     return rows
 

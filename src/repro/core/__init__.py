@@ -24,8 +24,9 @@ from .program import (Delay, Emit, Empty, Fifo, Full, Module, Op, Program,
                       Read, ReadNB, SimResult, Write, WriteNB)
 from .rtlsim import simulate_rtl
 from .taxonomy import Classification, classify, classify_dynamic
-from .trace import (CompiledTrace, ModuleTrace, RecordedTrace, TraceSimGraph,
-                    TraceUnsupported, compile_trace, record_trace,
+from .trace import (CompiledTrace, HybridCache, HybridSim, ModuleTrace,
+                    RecordedTrace, TraceSimGraph, TraceUnsupported,
+                    compile_trace, record_trace, simulate_hybrid,
                     simulate_traced)
 
 __all__ = [
@@ -40,4 +41,5 @@ __all__ = [
     "classify_dynamic",
     "TraceUnsupported", "RecordedTrace", "ModuleTrace", "CompiledTrace",
     "TraceSimGraph", "record_trace", "compile_trace", "simulate_traced",
+    "HybridCache", "HybridSim", "simulate_hybrid",
 ]

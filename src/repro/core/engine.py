@@ -528,21 +528,32 @@ class OmniSim:
 
 
 def simulate(program: Program, depths=None, shuffle_seed: Optional[int] = None,
-             max_steps: int = 50_000_000, trace: str = "auto") -> SimResult:
+             max_steps: int = 50_000_000, trace: str = "auto",
+             hybrid_cache=None) -> SimResult:
     """Run the OmniSim engine on ``program`` (optionally overriding depths).
 
     ``trace`` selects the initial-simulation strategy:
 
-      * ``"auto"`` (default) — try the trace-compiled replay
+      * ``"auto"`` (default) — try the straight-line trace-compiled replay
         (``core/trace.py``: generators entered once, op arrays replayed by
-        vectorized dispatch); fall back to the generator engine when the
-        design's control flow is cycle-dependent (live NB accesses/status
-        probes), the design deadlocks, or an SPSC violation must be
-        reported.  Results are identical either way (tests pin equality).
-      * ``"always"`` — trace replay or raise
+        vectorized dispatch); when the design's control flow is
+        cycle-dependent (live NB accesses / status probes), drop to the
+        *hybrid* segmented replay (``trace.simulate_hybrid``: blocking
+        segments compiled to flat arrays, generator protocol only at the
+        query points); fall back to the generator engine only when even the
+        hybrid path must defer (true deadlocks, SPSC violations — the
+        generator engine produces the paper-exact report).  Results are
+        identical on every path (tests pin equality).
+      * ``"always"`` — compiled replay (straight-line or hybrid) or raise
         :class:`~repro.core.trace.TraceUnsupported`.
       * ``"never"`` — generator engine only (the semantics reference; also
         used with ``shuffle_seed`` to exercise scheduling independence).
+
+    ``hybrid_cache`` (a :class:`~repro.core.trace.HybridCache`) memoizes
+    module yield streams across repeated simulations of the same design
+    shape — ``classify_dynamic`` threads one through its perturbed-depth
+    probe runs so unchanged modules replay without re-running their
+    generators.
 
     A non-``None`` ``shuffle_seed`` implies the generator path: the point
     of shuffling is to randomize actual task servicing order, which the
@@ -551,10 +562,10 @@ def simulate(program: Program, depths=None, shuffle_seed: Optional[int] = None,
 
     Module bodies must be *re-runnable*: ``mod.fn()`` may be invoked more
     than once per Program (an aborted trace recording falls back to the
-    generator engine, and the incremental/DSE fallbacks re-simulate from
-    scratch), so bodies must not mutate shared closure state or perform
-    external side effects — the same purity the DSL has always required
-    of ``resimulate``'s fallback path.
+    hybrid/generator paths, and the incremental/DSE fallbacks re-simulate
+    from scratch), so bodies must not mutate shared closure state or
+    perform external side effects — the same purity the DSL has always
+    required of ``resimulate``'s fallback path.
     """
     if trace not in ("auto", "always", "never"):
         raise ValueError(f"trace must be 'auto'|'always'|'never', got {trace!r}")
@@ -568,7 +579,14 @@ def simulate(program: Program, depths=None, shuffle_seed: Optional[int] = None,
         from . import trace as _trace
         try:
             return _trace.simulate_traced(program, max_steps=max_steps)
-        except _trace.TraceUnsupported:
-            if trace == "always":
+        except _trace.TraceUnsupported as exc:
+            if exc.dynamic:
+                try:
+                    return _trace.simulate_hybrid(program, max_steps=max_steps,
+                                                  cache=hybrid_cache)
+                except _trace.TraceUnsupported:
+                    if trace == "always":
+                        raise        # the hybrid verdict is the precise one
+            elif trace == "always":
                 raise
     return OmniSim(program, shuffle_seed=shuffle_seed, max_steps=max_steps).run()

@@ -81,11 +81,17 @@ def classify_dynamic(builder, n_variants: int = 4) -> Classification:
     conservative static classification stands.
 
     ``builder`` is a zero-arg callable returning a fresh Program (generators
-    are single-use).
+    are single-use).  All probe runs share one
+    :class:`~repro.core.trace.HybridCache`, so dynamic designs replay their
+    memoized module streams across the depth variants and only re-run
+    generators past genuine control-flow divergences (the witnesses this
+    probe is hunting for).
     """
+    from .trace import HybridCache
+    cache = HybridCache()
     base_prog = builder()
-    base = simulate(base_prog)
-    c = classify(builder(), simulate(builder()))
+    base = simulate(base_prog, hybrid_cache=cache)
+    c = classify(base_prog, base)
     if not c.has_nonblocking:
         return c                   # blocking-only cannot be Type C
     depths0 = base.depths
@@ -97,7 +103,7 @@ def classify_dynamic(builder, n_variants: int = 4) -> Classification:
     ][:n_variants]
     divergent = False
     for dv in variants:
-        r = simulate(builder(), depths=dv)
+        r = simulate(builder(), depths=dv, hybrid_cache=cache)
         if r.outputs != base.outputs or r.deadlock != base.deadlock:
             divergent = True
             break

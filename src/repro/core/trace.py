@@ -53,32 +53,48 @@ paper Table 2.
 """
 from __future__ import annotations
 
+import heapq
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .events import Node, NodeKind, SimStats
+from .events import Constraint, Node, NodeKind, RequestType, SimStats
 from .program import (Delay, Emit, Empty, Full, Program, Read, ReadNB,
                       SimResult, Write, WriteNB)
 
 NEGI = np.int64(-(1 << 60))
 
 # ---------------------------------------------------------------------------
-# Flat op encoding (one row per recorded op).  Only OP_READ/OP_WRITE survive
-# into the compiled arrays — delays fold into the gap column, dead probes
-# into a 1-cycle gap, Emits into the outputs dict — but the full opcode
-# space is defined so partial recordings and future NB periodization have a
-# stable encoding.
+# Flat op encoding (one row per recorded op).  OP_READ/OP_WRITE are the
+# blocking accesses that survive into the straight-line compiled arrays —
+# delays fold into the gap column, dead probes into a 1-cycle gap, Emits
+# into the outputs dict.  The hybrid engine additionally records committed
+# NB accesses (OP_READ_NB/OP_WRITE_NB), failed NB accesses (OP_NB_FAIL) and
+# used status probes (OP_PROBE) as chain rows, so its segmented op streams
+# share this encoding end to end.
 # ---------------------------------------------------------------------------
 OP_READ, OP_WRITE, OP_READ_NB, OP_WRITE_NB = 0, 1, 2, 3
 OP_EMPTY, OP_FULL, OP_DELAY, OP_EMIT = 4, 5, 6, 7
+OP_NB_FAIL, OP_PROBE, OP_PROBE_DEAD = 8, 9, 10
 
 # node-kind codes of the compiled graph (map to events.NodeKind)
 _NK_START, _NK_END, _NK_READ, _NK_WRITE = 0, 1, 2, 3
+_NK_NB_FAIL, _NK_PROBE = 4, 5
 _NK_TO_NODEKIND = {_NK_START: NodeKind.START, _NK_END: NodeKind.END,
-                   _NK_READ: NodeKind.FIFO_READ, _NK_WRITE: NodeKind.FIFO_WRITE}
+                   _NK_READ: NodeKind.FIFO_READ, _NK_WRITE: NodeKind.FIFO_WRITE,
+                   _NK_NB_FAIL: NodeKind.NB_FAIL, _NK_PROBE: NodeKind.PROBE}
+
+# row opcode -> node-kind code (committed NB accesses become ordinary
+# FIFO_READ/FIFO_WRITE nodes, exactly as in the generator engine)
+_ROW_TO_NK = np.full(11, -1, dtype=np.int8)
+_ROW_TO_NK[OP_READ] = _NK_READ
+_ROW_TO_NK[OP_READ_NB] = _NK_READ
+_ROW_TO_NK[OP_WRITE] = _NK_WRITE
+_ROW_TO_NK[OP_WRITE_NB] = _NK_WRITE
+_ROW_TO_NK[OP_NB_FAIL] = _NK_NB_FAIL
+_ROW_TO_NK[OP_PROBE] = _NK_PROBE
 
 
 class TraceUnsupported(Exception):
@@ -87,9 +103,16 @@ class TraceUnsupported(Exception):
     Raised on live non-blocking accesses / status probes (cycle-dependent
     control flow), untimed-KPN deadlock, SPSC violations, and depth-induced
     structural deadlocks or WAR cycles.  ``simulate(..., trace="auto")``
-    catches it and falls back to the generator engine, which handles every
-    design class (paper Fig. 3, Type A/B/C).
+    catches it and falls back to the hybrid segmented replay
+    (:func:`simulate_hybrid`) when ``dynamic`` is set — i.e. the only
+    obstacle was cycle-dependent NB/probe control flow — and otherwise to
+    the generator engine, which handles every design class (paper Fig. 3,
+    Type A/B/C).
     """
+
+    def __init__(self, msg: str, dynamic: bool = False):
+        super().__init__(msg)
+        self.dynamic = dynamic
 
 
 # ---------------------------------------------------------------------------
@@ -326,7 +349,8 @@ def record_trace(program: Program, max_steps: int = 50_000_000) -> RecordedTrace
                 raise TraceUnsupported(
                     f"{program.name}: module '{modules[mid].name}' issues "
                     f"{cls.__name__} — outcome is cycle-dependent, control "
-                    f"flow may diverge; using the generator path")
+                    f"flow may diverge; using the hybrid segmented replay",
+                    dynamic=True)
             else:
                 raise TypeError(f"unknown op {op!r}")
         gap_acc[mid] = gap
@@ -759,3 +783,1048 @@ def simulate_traced(program: Program,
         constraints=[],
         depths=depths,
     )
+
+
+# ===========================================================================
+# Hybrid trace compilation for dynamic (NB/probe) designs — paper Sec. 5.1
+# ===========================================================================
+# The straight-line replay above bails out the moment a module issues a live
+# non-blocking access or status probe, because the op stream past that point
+# is cycle-dependent.  The hybrid engine below keeps the same flat-array
+# machinery but segments each module's op stream at its *query points*:
+#
+#   * **blocking segments** (the ops between two queries) are recorded as
+#     flat (kind, fifo, gap, seq) rows exactly like :func:`record_trace` and
+#     timed array-at-a-time by an incremental frontier solver — the same
+#     ``t = cw + cummax(c - cw)`` chain recurrence as :func:`_solve_times`,
+#     restricted to the maximal prefix whose RAW/WAR sources are committed;
+#   * **query points** drop to the generator protocol of ``core/engine.py``:
+#     the query's source cycle is the (now solved) chain time, the verdict
+#     comes from the committed per-FIFO time tables (paper Table 2), and an
+#     unresolvable stuck state applies the earliest-query forced-false rule
+#     (paper Sec. 7.1) — sound here too, because every event that is still
+#     untimed at a stuck state transitively waits on some pending query and
+#     therefore commits strictly after the earliest priced query's cycle.
+#
+# The result is bit-identical to the generator engine (same graph, times,
+# FIFO tables, constraints and stats.{nodes,edges,queries}) because both
+# engines compute the same unique fixpoint: every resolution is made against
+# final committed times, and forced-false resolutions are only applied when
+# no event can still commit before the query's cycle.
+#
+# Segment memoization (:class:`HybridCache`): module bodies are pure and
+# re-runnable (the DSL contract), so a module's yield stream is a
+# deterministic function of the values sent into it (read values + query
+# outcomes).  A completed run therefore caches, per module, the full
+# yield-level stream; later runs of the *same design shape* (e.g.
+# ``classify_dynamic``'s repeated builder calls under perturbed depths)
+# replay the cached stream without ever invoking the generator, validating
+# every read value and query outcome against live state.  On divergence the
+# engine first looks for another cached branch whose prefix re-converges
+# with the live outcome, and only then materializes the real generator,
+# fast-forwarding it with the already-delivered send values.
+
+# module states
+_H_READY, _H_PARK_READ, _H_PARK_QUERY, _H_DONE = 0, 1, 2, 3
+
+# query codes
+_QC_READ_NB, _QC_WRITE_NB, _QC_EMPTY, _QC_FULL = 0, 1, 2, 3
+_QC_IS_READ_SIDE = (True, False, True, False)
+_QC_TO_RTYPE = (RequestType.FIFO_NB_READ, RequestType.FIFO_NB_WRITE,
+                RequestType.FIFO_CAN_READ, RequestType.FIFO_CAN_WRITE)
+
+# yield-op classes -> row opcodes, for fast-forward verification
+_CLS_TO_OP = {Read: OP_READ, Write: OP_WRITE, ReadNB: OP_READ_NB,
+              WriteNB: OP_WRITE_NB, Empty: OP_EMPTY, Full: OP_FULL,
+              Delay: OP_DELAY, Emit: OP_EMIT}
+
+# query-op lookups for the recorder's hot dispatch loops
+_OP_TO_QC = {OP_READ_NB: _QC_READ_NB, OP_WRITE_NB: _QC_WRITE_NB,
+             OP_EMPTY: _QC_EMPTY, OP_FULL: _QC_FULL}
+_CLS_TO_QC = {ReadNB: _QC_READ_NB, WriteNB: _QC_WRITE_NB,
+              Empty: _QC_EMPTY, Full: _QC_FULL}
+
+_VEC_MIN = 48          # pending-slice length above which the solver vectorizes
+
+
+class _GrowBuf:
+    """Amortized-doubling int64 append buffer (per-FIFO committed times)."""
+
+    __slots__ = ("a", "n")
+
+    def __init__(self):
+        self.a = np.empty(16, dtype=np.int64)
+        self.n = 0
+
+    def append(self, v: int) -> None:
+        if self.n == len(self.a):
+            self.a = np.concatenate([self.a, self.a])
+        self.a[self.n] = v
+        self.n += 1
+
+    def extend(self, vals: np.ndarray) -> None:
+        need = self.n + len(vals)
+        if need > len(self.a):
+            cap = len(self.a)
+            while cap < need:
+                cap *= 2
+            b = np.empty(cap, dtype=np.int64)
+            b[:self.n] = self.a[:self.n]
+            self.a = b
+        self.a[self.n:need] = vals
+        self.n = need
+
+
+@dataclass
+class _CachedRun:
+    """One module's completed yield-level stream (see :class:`HybridCache`).
+
+    ``ylog[i]`` is the i-th yielded op as ``(opcode, fifo_id, payload)``;
+    ``sends[i]`` is the value sent into the generator to resume after yield
+    ``i``.  Payloads: Read -> value read, Write -> value written,
+    ReadNB -> (ok, value), WriteNB -> (ok, value), Empty/Full -> verdict
+    bool (pre-negation), Delay -> cycles, Emit -> (key, value), dead probe
+    -> None.
+    """
+
+    ylog: list
+    sends: list
+
+
+class HybridCache:
+    """Cross-run segment memoization for the hybrid engine.
+
+    Keyed by the design *shape* (program name + FIFO/module name tuples) and
+    module id — **not** by FIFO depths, which is the point: repeated
+    simulations of the same design under perturbed depths
+    (``classify_dynamic``, DSE fallbacks) replay cached module streams and
+    re-run generators only past a genuine control-flow divergence.  Stores
+    up to ``max_variants`` outcome branches per module, most recent first.
+
+    Counters: ``hits`` (modules fully replayed without touching their
+    generator), ``misses`` (no cached branch at run start), ``switches``
+    (divergence repaired by another cached branch whose prefix re-converges)
+    and ``divergences`` (generator materialized and fast-forwarded).
+    """
+
+    def __init__(self, max_variants: int = 6):
+        self.max_variants = max_variants
+        self._runs: Dict[tuple, List[_CachedRun]] = {}
+        self.hits = 0
+        self.misses = 0
+        self.switches = 0
+        self.divergences = 0
+
+    @staticmethod
+    def signature(program: Program) -> tuple:
+        return (program.name,
+                tuple(f.name for f in program.fifos),
+                tuple(m.name for m in program.modules))
+
+    def lookup(self, sig: tuple, mid: int) -> List[_CachedRun]:
+        return self._runs.get((sig, mid), [])
+
+    def store(self, sig: tuple, mid: int, run: _CachedRun) -> None:
+        runs = self._runs.setdefault((sig, mid), [])
+        runs.insert(0, run)
+        del runs[self.max_variants:]
+
+    def promote(self, sig: tuple, mid: int, run: _CachedRun) -> None:
+        runs = self._runs.get((sig, mid), [])
+        if run in runs and runs[0] is not run:
+            runs.remove(run)
+            runs.insert(0, run)
+
+
+class _HMod:
+    """Per-module recorder state of the hybrid engine."""
+
+    __slots__ = ("mid", "name", "gen", "started", "state", "send",
+                 "kind", "fifo", "gap", "seq", "times", "gap_acc", "end_gap",
+                 "park_fid", "qid", "q_code", "q_fifo", "q_seq", "q_payload",
+                 "q_time", "cand", "cand_alts", "pos", "ylog", "sends")
+
+    def __init__(self, mid: int, name: str):
+        self.mid = mid
+        self.name = name
+        self.gen = None
+        self.started = False
+        self.state = _H_READY
+        self.send = None
+        self.kind: list = []          # row opcodes
+        self.fifo: list = []          # row fifo ids (-1 for none)
+        self.gap: list = []           # SEQ gap into each row (cycles)
+        self.seq: list = []           # 1-based per-FIFO seq (prospective for
+                                      # failed NB / probes)
+        self.times: list = []         # committed times; len == solve frontier
+        self.gap_acc = 1
+        self.end_gap = 1
+        self.park_fid = -1
+        self.qid = -1
+        self.q_code = -1
+        self.q_fifo = -1
+        self.q_seq = -1
+        self.q_payload = None
+        self.q_time = -1
+        self.cand: Optional[_CachedRun] = None
+        self.cand_alts: List[_CachedRun] = []
+        self.pos = 0                  # next yield index (cache replay)
+        self.ylog: Optional[list] = None
+        self.sends: Optional[list] = None
+
+
+class HybridSim:
+    """Segmented trace-compiled simulation of dynamic (NB/probe) designs.
+
+    One instance = one run.  See the section comment above for the
+    algorithm; :func:`simulate_hybrid` is the front door.  Raises
+    :class:`TraceUnsupported` on true deadlocks, WAR cycles and SPSC
+    violations so ``simulate(..., trace="auto")`` can reproduce the
+    generator engine's exact report.
+    """
+
+    def __init__(self, program: Program, cache: Optional[HybridCache] = None,
+                 max_steps: int = 50_000_000):
+        self.program = program
+        self.cache = cache
+        self.max_steps = max_steps
+        self.depths = [f.depth for f in program.fifos]
+        n_fifo = len(program.fifos)
+        self.mods = [_HMod(m.mid, m.name) for m in program.modules]
+        self.buffers: List[deque] = [deque() for _ in range(n_fifo)]
+        self.fw_times = [_GrowBuf() for _ in range(n_fifo)]  # committed writes
+        self.fr_times = [_GrowBuf() for _ in range(n_fifo)]  # committed reads
+        self.wseq = [0] * n_fifo      # recorded committed writes per FIFO
+        self.rseq = [0] * n_fifo      # recorded committed reads per FIFO
+        self.writer_of: Dict[int, int] = {}
+        self.reader_of: Dict[int, int] = {}
+        self.waiting_reader: Dict[int, int] = {}
+        self.outputs: Dict[str, Any] = {}
+        self.constraints: list = []   # (q_code, fifo, seq, mid, row, outcome)
+        self.heap: List[Tuple[int, int, int]] = []   # (time, qid, mid)
+        self.unpriced: set = set()
+        self.solve_dirty: set = set()
+        self.runq: deque = deque()
+        self.queued = [False] * len(self.mods)
+        self._qid = 0
+        self.steps = 0
+        self.activations = 0
+        self.phases = 0
+        self.queries = 0
+        self.forced = 0
+        self.skipped_probes = 0
+        if cache is not None:
+            self.sig = HybridCache.signature(program)
+            for st in self.mods:
+                st.ylog, st.sends = [], []
+                st.cand_alts = cache.lookup(self.sig, st.mid)
+                if st.cand_alts:
+                    st.cand = st.cand_alts[0]
+                else:
+                    cache.misses += 1
+
+    # ----------------------------------------------------------------- utils
+    def _unsup(self, msg: str) -> TraceUnsupported:
+        return TraceUnsupported(f"{self.program.name}: {msg}")
+
+    def _check_endpoint(self, f: int, mid: int, write_side: bool) -> None:
+        table = self.writer_of if write_side else self.reader_of
+        prev = table.setdefault(f, mid)
+        if prev != mid:
+            raise self._unsup(
+                f"fifo {f} has two {'writer' if write_side else 'reader'} "
+                f"modules — SPSC violation; deferring to the generator "
+                f"engine's endpoint check")
+
+    def _enqueue(self, mid: int) -> None:
+        if not self.queued[mid]:
+            self.queued[mid] = True
+            self.runq.append(mid)
+
+    def _mark_dirty(self, mid: int) -> None:
+        if mid >= 0:
+            self.solve_dirty.add(mid)
+
+    # ------------------------------------------------------- frontier solver
+    def _advance_frontier(self, st: _HMod) -> bool:
+        """Time the maximal ready prefix of ``st``'s pending rows.
+
+        Pending rows are always blocking accesses (query rows are committed
+        with their resolution time the moment they resolve), so each row's
+        time is ``max(t_prev + gap, src + 1)`` with ``src`` the RAW matching
+        write (reads) or the WAR target read (writes, seq > depth).  Large
+        pending slices go through the vectorized cummax path — the "compile
+        the blocking segment" move of paper Sec. 5.1.
+        """
+        times_l = st.times
+        lo, hi = len(times_l), len(st.kind)
+        if lo >= hi:
+            return False
+        kind_l, fifo_l, gap_l, seq_l = st.kind, st.fifo, st.gap, st.seq
+        fw, fr, depths = self.fw_times, self.fr_times, self.depths
+        t_prev = times_l[lo - 1] if lo else 0
+        touched_w: set = set()
+        touched_r: set = set()
+        # scalar pass over the first few pending rows: a frontier that
+        # advances in FIFO-depth-sized hops (pipeline ping-pong) never pays
+        # numpy call overhead
+        cap = min(hi, lo + _VEC_MIN)
+        i = lo
+        while i < cap:
+            f = fifo_l[i]
+            s = seq_l[i]
+            t = t_prev + gap_l[i]
+            if kind_l[i] == OP_READ:
+                wt = fw[f]
+                if s > wt.n:
+                    break
+                c = int(wt.a[s - 1]) + 1
+                if c > t:
+                    t = c
+                fr[f].append(t)
+                touched_r.add(f)
+            else:                                   # OP_WRITE
+                tg = s - depths[f]
+                if tg > 0:
+                    rt = fr[f]
+                    if tg > rt.n:
+                        break
+                    c = int(rt.a[tg - 1]) + 1
+                    if c > t:
+                        t = c
+                fw[f].append(t)
+                touched_w.add(f)
+            times_l.append(t)
+            t_prev = t
+            i += 1
+        if i == cap and cap < hi:
+            # long runnable stretch: batch the rest through the vectorized
+            # cummax in geometrically growing windows (each window is only
+            # materialized as arrays once per visit)
+            self._advance_frontier_np(st, hi, touched_r, touched_w)
+        for f in touched_w:
+            self._mark_dirty(self.reader_of.get(f, -1))
+        for f in touched_r:
+            self._mark_dirty(self.writer_of.get(f, -1))
+        return len(times_l) > lo
+
+    def _advance_frontier_np(self, st: _HMod, hi: int,
+                             touched_r: set, touched_w: set) -> None:
+        """Windowed vectorized frontier advance: ``t = cw + cummax(c - cw)``
+        over the maximal ready prefix, window doubling per round."""
+        dep = np.asarray(self.depths, dtype=np.int64)
+        window = 2 * _VEC_MIN
+        while True:
+            lo = len(st.times)
+            if lo >= hi:
+                return
+            w = min(hi - lo, window)
+            kind = np.asarray(st.kind[lo:lo + w], dtype=np.int64)
+            fifo = np.asarray(st.fifo[lo:lo + w], dtype=np.int64)
+            gap = np.asarray(st.gap[lo:lo + w], dtype=np.int64)
+            seq = np.asarray(st.seq[lo:lo + w], dtype=np.int64)
+            nwt = np.fromiter((b.n for b in self.fw_times), np.int64,
+                              len(self.fw_times))
+            nrt = np.fromiter((b.n for b in self.fr_times), np.int64,
+                              len(self.fr_times))
+            rd = kind == OP_READ
+            avail = np.empty(w, dtype=bool)
+            avail[rd] = seq[rd] <= nwt[fifo[rd]]
+            wr = ~rd
+            tg = seq[wr] - dep[fifo[wr]]
+            avail[wr] = (tg <= 0) | (tg <= nrt[fifo[wr]])
+            stop = w if avail.all() else int(np.argmin(avail))
+            if stop == 0:
+                return
+            kind, fifo, gap, seq, rd = (kind[:stop], fifo[:stop], gap[:stop],
+                                        seq[:stop], rd[:stop])
+            c = np.full(stop, NEGI, dtype=np.int64)
+            for f in np.unique(fifo):
+                m_r = rd & (fifo == f)
+                if m_r.any():
+                    c[m_r] = self.fw_times[f].a[seq[m_r] - 1] + 1
+                m_w = ~rd & (fifo == f)
+                if m_w.any():
+                    sw = seq[m_w]
+                    con = sw > self.depths[f]
+                    if con.any():
+                        idx = np.flatnonzero(m_w)[con]
+                        c[idx] = (self.fr_times[f].a[sw[con]
+                                                     - self.depths[f] - 1] + 1)
+            t_prev = st.times[lo - 1] if lo else 0
+            cw = t_prev + np.cumsum(gap)
+            t = cw + np.maximum.accumulate(np.maximum(c - cw, 0))
+            st.times.extend(t.tolist())
+            for f in np.unique(fifo):
+                m_r = rd & (fifo == f)
+                if m_r.any():
+                    self.fr_times[f].extend(t[m_r])
+                    touched_r.add(f)
+                m_w = ~rd & (fifo == f)
+                if m_w.any():
+                    self.fw_times[f].extend(t[m_w])
+                    touched_w.add(f)
+            if stop < w:
+                return
+            window *= 2
+
+    def _solve(self) -> bool:
+        """Run the frontier solver to fixpoint over the dirty-module set.
+
+        Seeds the worklist with every module that has pending (recorded but
+        untimed) rows — a handful of length checks, cheaper than per-op
+        dirty marking in the recorder hot loop.
+        """
+        dirty = self.solve_dirty
+        for st in self.mods:
+            if len(st.times) < len(st.kind):
+                dirty.add(st.mid)
+        changed = False
+        while dirty:
+            st = self.mods[dirty.pop()]
+            if self._advance_frontier(st):
+                changed = True
+        return changed
+
+    # --------------------------------------------------------------- queries
+    def _verdict(self, code: int, f: int, s: int, t: int) -> Optional[bool]:
+        """Table-2 resolution against the committed time tables; ``None`` =
+        target event not yet committed (same rule as FifoTable.can_*_at)."""
+        if _QC_IS_READ_SIDE[code]:
+            wt = self.fw_times[f]
+            if s <= wt.n:
+                return bool(wt.a[s - 1] < t)
+            return None
+        tg = s - self.depths[f]
+        if tg <= 0:
+            return True
+        rt = self.fr_times[f]
+        if tg <= rt.n:
+            return bool(rt.a[tg - 1] < t)
+        return None
+
+    def _apply_query(self, st: _HMod, outcome: bool) -> None:
+        """Commit a resolved query at its source cycle ``st.q_time`` —
+        the generator engine's ``_apply_query_result``, on flat arrays."""
+        code, f, s, t = st.q_code, st.q_fifo, st.q_seq, st.q_time
+        row = len(st.kind)
+        self.constraints.append((code, f, s, st.mid, row, outcome))
+        payload = st.q_payload
+        if code == _QC_READ_NB:
+            if outcome:
+                v = self.buffers[f].popleft()
+                st.kind.append(OP_READ_NB)
+                self.rseq[f] = s
+                self.fr_times[f].append(t)
+                self._mark_dirty(self.writer_of.get(f, -1))
+                st.send = (True, v)
+            else:
+                st.kind.append(OP_NB_FAIL)
+                st.send = (False, None)
+            expected = st.send
+        elif code == _QC_WRITE_NB:
+            if outcome:
+                st.kind.append(OP_WRITE_NB)
+                self.wseq[f] = s
+                self.fw_times[f].append(t)
+                self._mark_dirty(self.reader_of.get(f, -1))
+                self.buffers[f].append(payload)
+                w = self.waiting_reader.pop(f, None)
+                if w is not None:
+                    self._enqueue(w)
+                st.send = True
+            else:
+                st.kind.append(OP_NB_FAIL)
+                st.send = False
+            expected = (outcome, payload)
+        else:                                       # Empty / Full probe
+            st.kind.append(OP_PROBE)
+            st.send = not outcome
+            expected = outcome
+        st.fifo.append(f)
+        st.gap.append(st.gap_acc)
+        st.seq.append(s)
+        st.times.append(t)
+        st.gap_acc = 1
+        st.q_payload = None
+        st.state = _H_READY
+        op_code = (OP_READ_NB, OP_WRITE_NB, OP_EMPTY, OP_FULL)[code]
+        if st.cand is not None:
+            want = (st.cand.ylog[st.pos][2]
+                    if st.pos < len(st.cand.ylog) else None)
+            if want == expected:
+                st.pos += 1
+            else:
+                self._diverge(st, (op_code, f, expected), st.send)
+        elif st.ylog is not None:
+            st.ylog.append((op_code, f, expected))
+            st.sends.append(st.send)
+
+    def _force_earliest(self) -> None:
+        """Earliest-query forced-false rule (paper Sec. 7.1).
+
+        Sound under run-ahead recording: at a stuck state every recorded-
+        but-untimed event transitively waits (through chain and RAW/WAR
+        sources) on some pending query's module resuming, resumptions occur
+        at cycles > the earliest priced query's cycle, and any *unpriced*
+        query's own cycle depends on such an event — so no future commit can
+        land strictly before the forced query's cycle.
+        """
+        while self.heap:
+            t, qid, mid = heapq.heappop(self.heap)
+            st = self.mods[mid]
+            if st.state != _H_PARK_QUERY or st.qid != qid:
+                continue
+            self.forced += 1
+            self._apply_query(st, False)
+            self._enqueue(mid)
+            return
+        raise AssertionError("_force_earliest called with no priced query")
+
+    def _resolve_parked(self) -> bool:
+        """At quiescence: price newly-solvable queries, then resolve every
+        currently-definitive one earliest-first (engine step ❹)."""
+        if self.unpriced:
+            for mid in sorted(self.unpriced):
+                st = self.mods[mid]
+                if st.state != _H_PARK_QUERY:
+                    self.unpriced.discard(mid)
+                    continue
+                if len(st.times) == len(st.kind):
+                    t = (st.times[-1] if st.times else 0) + st.gap_acc
+                    st.q_time = t
+                    self.unpriced.discard(mid)
+                    heapq.heappush(self.heap, (t, st.qid, mid))
+        resolved = False
+        remaining: List[Tuple[int, int, int]] = []
+        while self.heap:
+            entry = heapq.heappop(self.heap)
+            t, qid, mid = entry
+            st = self.mods[mid]
+            if st.state != _H_PARK_QUERY or st.qid != qid:
+                continue
+            v = self._verdict(st.q_code, st.q_fifo, st.q_seq, t)
+            if v is None:
+                remaining.append(entry)
+                continue
+            self._apply_query(st, v)
+            self._enqueue(mid)
+            resolved = True
+        self.heap = remaining        # drained in heap order -> still a heap
+        return resolved
+
+    # -------------------------------------------------------- cache plumbing
+    # Invariants: while ``st.cand`` is set, the module's processed yield
+    # history IS ``st.cand.ylog[:st.pos]`` (every value/outcome-carrying
+    # entry is validated against live state before being applied), so
+    # ``st.ylog``/``st.sends`` are not maintained; they are reconstructed
+    # from the candidate prefix on divergence.  Live modules with a cache
+    # attached log every yield.
+
+    @staticmethod
+    def _log(st: _HMod, code: int, f: int, payload) -> None:
+        st.ylog.append((code, f, payload))
+
+    @staticmethod
+    def _ff_match(cls, code: int) -> bool:
+        """Loose yield-vs-log check during generator fast-forward."""
+        if code == OP_PROBE_DEAD:
+            return cls is Empty or cls is Full
+        return _CLS_TO_OP.get(cls) == code
+
+    def _diverge(self, st: _HMod, expected_entry: tuple, send) -> None:
+        """Cached branch diverged from live state: switch to a cached branch
+        that re-converges with the live outcome if one exists, else
+        materialize the generator (fast-forwarded with the already-delivered
+        send values, which equal the validated candidate prefix)."""
+        pos = st.pos
+        prefix = st.cand.ylog[:pos]
+        for alt in st.cand_alts:
+            if alt is st.cand or len(alt.ylog) <= pos:
+                continue
+            if alt.ylog[pos] == expected_entry and alt.ylog[:pos] == prefix:
+                self.cache.switches += 1
+                st.cand = alt
+                st.pos += 1
+                return
+        self.cache.divergences += 1
+        sends = st.cand.sends[:pos]
+        st.cand = None
+        st.ylog = prefix + [expected_entry]
+        st.sends = sends + [send]
+        gen = self.program.modules[st.mid].fn()
+        try:
+            op = next(gen)
+            for i in range(pos):
+                if not self._ff_match(op.__class__, prefix[i][0]):
+                    raise self._unsup(
+                        f"module '{st.name}' is not re-runnable (yield "
+                        f"stream diverged on replay); bodies must be pure")
+                op = gen.send(sends[i])
+        except StopIteration:
+            raise self._unsup(
+                f"module '{st.name}' is not re-runnable (terminated early "
+                f"on replay); bodies must be pure")
+        if not self._ff_match(op.__class__, expected_entry[0]):
+            raise self._unsup(
+                f"module '{st.name}' is not re-runnable (yield stream "
+                f"diverged on replay); bodies must be pure")
+        st.gen = gen
+        st.started = True
+
+    # ------------------------------------------------------------- recording
+    def _record_access(self, st: _HMod, code: int, f: int, s: int) -> None:
+        st.kind.append(code)
+        st.fifo.append(f)
+        st.gap.append(st.gap_acc)
+        st.seq.append(s)
+        st.gap_acc = 1
+
+    def _issue_query(self, st: _HMod, code: int, f: int, payload) -> bool:
+        """Handle a query op; True if resolved inline (task may continue)."""
+        self.queries += 1
+        self._check_endpoint(f, st.mid, not _QC_IS_READ_SIDE[code])
+        s = (self.rseq[f] if _QC_IS_READ_SIDE[code] else self.wseq[f]) + 1
+        st.q_code, st.q_fifo, st.q_seq, st.q_payload = code, f, s, payload
+        if len(st.times) != len(st.kind):
+            # chain not timed up to the query: try to close the gap now
+            self._solve()
+        if len(st.times) == len(st.kind):
+            t = (st.times[-1] if st.times else 0) + st.gap_acc
+            st.q_time = t
+            v = self._verdict(code, f, s, t)
+            if v is not None:
+                self._apply_query(st, v)
+                return True
+            self._qid += 1
+            st.qid = self._qid
+            st.state = _H_PARK_QUERY
+            heapq.heappush(self.heap, (t, st.qid, st.mid))
+            return False
+        self._qid += 1
+        st.qid = self._qid
+        st.state = _H_PARK_QUERY
+        self.unpriced.add(st.mid)
+        return False
+
+    def _advance(self, mid: int) -> None:
+        """Drive one module until it parks, finishes, or the run queue must
+        rotate — the hybrid recorder's hot loop (cheap list appends instead
+        of the generator engine's per-op graph-object churn)."""
+        st = self.mods[mid]
+        state = st.state
+        if state == _H_DONE or state == _H_PARK_QUERY:
+            return
+        self.activations += 1
+        if state == _H_PARK_READ:
+            f = st.park_fid
+            buf = self.buffers[f]
+            if not buf:
+                raise self._unsup(
+                    f"fifo {f} drained by another reader while "
+                    f"'{st.name}' was parked — SPSC violation; deferring to "
+                    f"the generator engine's endpoint check")
+            v = buf.popleft()
+            if st.cand is not None:
+                if st.cand.ylog[st.pos][2] != v:
+                    self._diverge(st, (OP_READ, f, v), v)
+                else:
+                    st.pos += 1
+            elif st.ylog is not None:
+                st.ylog[-1] = (OP_READ, f, v)     # patch the parked entry
+                st.sends.append(v)
+            s = self.rseq[f] = self.rseq[f] + 1
+            self._record_access(st, OP_READ, f, s)
+            st.send = v
+            st.park_fid = -1
+            st.state = _H_READY
+        while True:
+            # ---- fetch the next yielded op (cached stream or generator)
+            self.steps += 1
+            if self.steps > self.max_steps:
+                raise RuntimeError(
+                    f"step budget exceeded ({self.max_steps}); possible "
+                    f"livelock — neither OmniSim nor co-sim detects livelock")
+            cand = st.cand
+            if cand is not None:
+                if st.pos >= len(cand.ylog):
+                    st.state = _H_DONE
+                    st.end_gap = st.gap_acc
+                    if self.cache is not None:
+                        self.cache.hits += 1
+                        self.cache.promote(self.sig, mid, cand)
+                    return
+                code, f, payload = cand.ylog[st.pos]
+                # dispatch on the cached opcode
+                if code == OP_READ:
+                    self._check_endpoint(f, mid, False)
+                    buf = self.buffers[f]
+                    if not buf:
+                        prev = self.waiting_reader.get(f)
+                        if prev is not None and prev != mid:
+                            raise self._unsup(
+                                f"two modules read fifo {f} — SPSC "
+                                f"violation; deferring to the generator "
+                                f"engine's endpoint check")
+                        self.waiting_reader[f] = mid
+                        st.park_fid = f
+                        st.state = _H_PARK_READ
+                        return
+                    v = buf.popleft()
+                    if payload != v:
+                        self._diverge(st, (OP_READ, f, v), v)
+                        s = self.rseq[f] = self.rseq[f] + 1
+                        self._record_access(st, OP_READ, f, s)
+                        st.send = v
+                        continue
+                    st.pos += 1
+                    s = self.rseq[f] = self.rseq[f] + 1
+                    self._record_access(st, OP_READ, f, s)
+                    st.send = v
+                elif code == OP_WRITE:
+                    self._check_endpoint(f, mid, True)
+                    st.pos += 1
+                    s = self.wseq[f] = self.wseq[f] + 1
+                    self._record_access(st, OP_WRITE, f, s)
+                    self.buffers[f].append(payload)
+                    w = self.waiting_reader.pop(f, None)
+                    if w is not None:
+                        self._enqueue(w)
+                    st.send = None
+                elif code == OP_DELAY:
+                    st.pos += 1
+                    st.gap_acc += payload
+                    st.send = None
+                elif code == OP_EMIT:
+                    st.pos += 1
+                    self.outputs[payload[0]] = payload[1]
+                    st.send = None
+                elif code == OP_PROBE_DEAD:
+                    st.pos += 1
+                    self.skipped_probes += 1
+                    st.gap_acc += 1
+                    st.send = None
+                else:       # query op: OP_READ_NB / OP_WRITE_NB / OP_EMPTY/FULL
+                    qc = _OP_TO_QC[code]
+                    qpayload = payload[1] if code == OP_WRITE_NB else None
+                    if not self._issue_query(st, qc, f, qpayload):
+                        return
+                continue
+            # ---- live generator path
+            gen = st.gen
+            if gen is None:
+                gen = st.gen = self.program.modules[mid].fn()
+            log = st.ylog is not None
+            try:
+                if not st.started:
+                    st.started = True
+                    op = next(gen)
+                else:
+                    op = gen.send(st.send)
+            except StopIteration:
+                st.state = _H_DONE
+                st.end_gap = st.gap_acc
+                return
+            st.send = None
+            cls = op.__class__
+            if cls is Read:
+                f = op.fifo.fid
+                self._check_endpoint(f, mid, False)
+                buf = self.buffers[f]
+                if not buf:
+                    prev = self.waiting_reader.get(f)
+                    if prev is not None and prev != mid:
+                        raise self._unsup(
+                            f"two modules read fifo '{op.fifo.name}' — SPSC "
+                            f"violation; deferring to the generator engine's "
+                            f"endpoint check")
+                    self.waiting_reader[f] = mid
+                    st.park_fid = f
+                    st.state = _H_PARK_READ
+                    if log:
+                        self._log(st, OP_READ, f, None)  # patched on wake
+                    return
+                v = buf.popleft()
+                s = self.rseq[f] = self.rseq[f] + 1
+                self._record_access(st, OP_READ, f, s)
+                st.send = v
+                if log:
+                    self._log(st, OP_READ, f, v)
+                    st.sends.append(v)
+            elif cls is Write:
+                f = op.fifo.fid
+                self._check_endpoint(f, mid, True)
+                s = self.wseq[f] = self.wseq[f] + 1
+                self._record_access(st, OP_WRITE, f, s)
+                self.buffers[f].append(op.value)
+                w = self.waiting_reader.pop(f, None)
+                if w is not None:
+                    self._enqueue(w)
+                if log:
+                    self._log(st, OP_WRITE, f, op.value)
+                    st.sends.append(None)
+            elif cls is Delay:
+                st.gap_acc += op.cycles
+                if log:
+                    self._log(st, OP_DELAY, -1, op.cycles)
+                    st.sends.append(None)
+            elif cls is Emit:
+                self.outputs[op.key] = op.value
+                if log:
+                    self._log(st, OP_EMIT, -1, (op.key, op.value))
+                    st.sends.append(None)
+            elif (cls is Empty or cls is Full) and not op.used:
+                self.skipped_probes += 1
+                st.gap_acc += 1
+                if log:
+                    self._log(st, OP_PROBE_DEAD, op.fifo.fid, None)
+                    st.sends.append(None)
+            elif cls in (ReadNB, WriteNB, Empty, Full):
+                if not self._issue_query(st, _CLS_TO_QC[cls], op.fifo.fid,
+                                         getattr(op, "value", None)):
+                    return
+            else:
+                raise TypeError(f"unknown op {op!r}")
+
+    # ------------------------------------------------------------------- run
+    def run(self) -> SimResult:
+        mods = self.mods
+        for st in mods:
+            self._enqueue(st.mid)
+        runq = self.runq
+        while True:
+            while runq:
+                mid = runq.popleft()
+                self.queued[mid] = False
+                self._advance(mid)
+            # ---- quiescence (engine protocol step ❹) ----
+            self.phases += 1
+            if all(st.state == _H_DONE for st in mods):
+                break
+            self._solve()
+            if self._resolve_parked():
+                continue
+            if self.heap:
+                self._force_earliest()
+                continue
+            blocked = [st.name for st in mods if st.state != _H_DONE]
+            raise self._unsup(
+                f"quiescence with no resolvable query — modules {blocked} "
+                f"are deadlocked; the generator engine will report the "
+                f"exact stall cycle")
+        self._solve()
+        if any(len(st.times) != len(st.kind) for st in mods):
+            raise self._unsup(
+                "recorded events cannot all commit under these depths "
+                "(structural deadlock or WAR cycle); the generator engine "
+                "will report the exact stall cycle")
+        return self._finish()
+
+    # --------------------------------------------------------------- finish
+    def _finish(self) -> SimResult:
+        program = self.program
+        mods = self.mods
+        n_mod = len(mods)
+        n_fifo = len(program.fifos)
+        counts = [len(st.kind) for st in mods]
+        n = sum(counts) + 2 * n_mod
+        seq_w = np.zeros(n, dtype=np.int64)
+        node_kind = np.empty(n, dtype=np.int8)
+        node_fifo = np.full(n, -1, dtype=np.int64)
+        node_seq = np.full(n, -1, dtype=np.int64)
+        base = np.full(n, NEGI, dtype=np.int64)
+        times = np.zeros(n, dtype=np.int64)
+        module_arr = np.empty(n, dtype=np.int64)
+        slices: List[Tuple[int, int]] = []
+        row_kind_parts, row_fifo_parts, row_node_parts = [], [], []
+        row_seq_parts = []
+        off = 0
+        for m, st in enumerate(mods):
+            L = counts[m]
+            hi = off + L + 2
+            slices.append((off, hi))
+            module_arr[off:hi] = m
+            node_kind[off] = _NK_START
+            base[off] = 0
+            times[off] = 0
+            rk = np.asarray(st.kind, dtype=np.int64)
+            node_kind[off + 1:hi - 1] = _ROW_TO_NK[rk]
+            node_fifo[off + 1:hi - 1] = st.fifo
+            node_seq[off + 1:hi - 1] = st.seq
+            seq_w[off + 1:hi - 1] = st.gap
+            seq_w[hi - 1] = st.end_gap
+            t_rows = np.asarray(st.times, dtype=np.int64)
+            times[off + 1:hi - 1] = t_rows
+            times[hi - 1] = (int(t_rows[-1]) if L else 0) + st.end_gap
+            node_kind[hi - 1] = _NK_END
+            row_kind_parts.append(rk)
+            row_fifo_parts.append(np.asarray(st.fifo, dtype=np.int64))
+            row_seq_parts.append(np.asarray(st.seq, dtype=np.int64))
+            row_node_parts.append(np.arange(off + 1, hi - 1, dtype=np.int64))
+            off = hi
+        z = np.zeros(0, np.int64)
+        kind_all = np.concatenate(row_kind_parts) if row_kind_parts else z
+        fifo_all = np.concatenate(row_fifo_parts) if row_fifo_parts else z
+        seq_all = np.concatenate(row_seq_parts) if row_seq_parts else z
+        node_all = np.concatenate(row_node_parts) if row_node_parts else z
+        is_read = (kind_all == OP_READ) | (kind_all == OP_READ_NB)
+        is_write = (kind_all == OP_WRITE) | (kind_all == OP_WRITE_NB)
+        fifo_w_nodes: List[np.ndarray] = []
+        fifo_r_nodes: List[np.ndarray] = []
+        fifo_w_blocking: List[np.ndarray] = []
+        raw_dst_parts, raw_src_parts = [], []
+        war_dst_parts, war_src_parts = [], []
+        fifo_wmod = np.full(n_fifo, -1, dtype=np.int64)
+        fifo_rmod = np.full(n_fifo, -1, dtype=np.int64)
+        for fid in range(n_fifo):
+            on_f = fifo_all == fid
+            w_sel = on_f & is_write
+            r_sel = on_f & is_read
+            # committed accesses sorted by per-FIFO seq (commit order; each
+            # side is a single module, so chain order == seq order, but the
+            # concatenation above is module-major)
+            w_order = np.argsort(seq_all[w_sel], kind="stable")
+            r_order = np.argsort(seq_all[r_sel], kind="stable")
+            w_nodes = node_all[w_sel][w_order]
+            r_nodes = node_all[r_sel][r_order]
+            fifo_w_nodes.append(np.ascontiguousarray(w_nodes))
+            fifo_r_nodes.append(np.ascontiguousarray(r_nodes))
+            blocking = np.asarray(kind_all[w_sel][w_order] == OP_WRITE,
+                                  dtype=bool)
+            fifo_w_blocking.append(blocking)
+            fifo_wmod[fid] = self.writer_of.get(fid, -1)
+            fifo_rmod[fid] = self.reader_of.get(fid, -1)
+            # RAW: r-th blocking read <- r-th write (NB reads: constraint only)
+            blk_r = kind_all[r_sel][r_order] == OP_READ
+            if blk_r.any():
+                raw_dst_parts.append(r_nodes[blk_r])
+                raw_src_parts.append(w_nodes[:len(r_nodes)][blk_r])
+            # WAR: w-th blocking write (w > S) <- (w-S)-th read
+            S = self.depths[fid]
+            nw = len(w_nodes)
+            if nw > S:
+                w_tail = np.arange(S, nw)
+                blk_w = blocking[S:]
+                sel = w_tail[blk_w]
+                if len(sel):
+                    war_dst_parts.append(w_nodes[sel])
+                    war_src_parts.append(r_nodes[sel - S])
+        raw_dst = np.concatenate(raw_dst_parts) if raw_dst_parts else z
+        raw_src = np.concatenate(raw_src_parts) if raw_src_parts else z
+        war_dst = np.concatenate(war_dst_parts) if war_dst_parts else z
+        war_src = np.concatenate(war_src_parts) if war_src_parts else z
+        ct = CompiledTrace(n=n, n_modules=n_mod, slices=slices, seq_w=seq_w,
+                           base=base, node_kind=node_kind,
+                           node_fifo=node_fifo, node_seq=node_seq,
+                           fifo_w_nodes=fifo_w_nodes,
+                           fifo_r_nodes=fifo_r_nodes, fifo_wmod=fifo_wmod,
+                           fifo_rmod=fifo_rmod, raw_dst=raw_dst,
+                           raw_src=raw_src, trace=None)
+        cycles = int(times.max()) if n else 0
+
+        from .engine import OmniSim
+        from .incremental import CompiledGraph
+        engine = OmniSim(program)
+        engine.outputs = dict(self.outputs)
+        engine.graph = TraceSimGraph(ct, times, war_dst, war_src, module_arr)
+        for fobj in program.fifos:
+            tbl = engine.fifos[fobj.fid]
+            w_nodes = fifo_w_nodes[fobj.fid]
+            r_nodes = fifo_r_nodes[fobj.fid]
+            tbl._w_nodes = w_nodes.astype(np.int64, copy=True)
+            tbl._w_times = times[w_nodes]
+            tbl._nw = len(w_nodes)
+            tbl._r_nodes = r_nodes.astype(np.int64, copy=True)
+            tbl._r_times = times[r_nodes]
+            tbl._nr = len(r_nodes)
+            tbl.values.extend(self.buffers[fobj.fid])
+        engine._writer_of = dict(self.writer_of)
+        engine._reader_of = dict(self.reader_of)
+        # materialize the recorded constraints (engine-identical records)
+        offs = [lo for (lo, _) in slices]
+        constraints = [
+            Constraint(_QC_TO_RTYPE[code], f, s, offs[mid] + 1 + row, outcome)
+            for (code, f, s, mid, row, outcome) in self.constraints
+        ]
+        engine.constraints = constraints
+        stats = engine.stats
+        stats.nodes = n - n_mod
+        stats.edges = engine.graph.n_edges
+        stats.queries = self.queries
+        stats.queries_forced_false = self.forced
+        stats.quiescence_rounds = self.phases
+        stats.resumes = self.activations
+        stats.skipped_probes = self.skipped_probes
+        # pre-built incremental cache: resimulate/resimulate_batch skip
+        # graph re-interpretation entirely (same contract as the pure
+        # trace path, extended with NB constraints + blocking-write masks)
+        fifos_cg = [(w.copy(), r.copy(), blk.copy())
+                    for w, r, blk in zip(fifo_w_nodes, fifo_r_nodes,
+                                         fifo_w_blocking)]
+        c_kind = np.asarray(
+            [0 if _QC_IS_READ_SIDE[c[0]] else 1 for c in self.constraints],
+            np.int64)
+        engine._incr_cache = CompiledGraph(
+            n=n,
+            raw_dst=raw_dst.copy(),
+            raw_src=raw_src.copy(),
+            raw_w=np.ones(len(raw_dst), np.int64),
+            base=base.copy(),
+            chains=[np.arange(lo, hi, dtype=np.int64) for (lo, hi) in slices],
+            seq_w=seq_w.copy(),
+            fifos=fifos_cg,
+            c_kind=c_kind,
+            c_fifo=np.asarray([c[1] for c in self.constraints], np.int64),
+            c_seq=np.asarray([c[2] for c in self.constraints], np.int64),
+            c_src=np.asarray([c.source_node for c in constraints], np.int64),
+            c_out=np.asarray([c[5] for c in self.constraints], bool),
+        )
+        n_segments = 0
+        for st in mods:
+            blk = np.asarray([k <= OP_WRITE for k in st.kind], dtype=bool)
+            if len(blk):
+                n_segments += int(blk[0]) + int(
+                    np.count_nonzero(blk[1:] & ~blk[:-1]))
+        engine._hybrid = {
+            "ops": int(len(kind_all)),
+            "queries": self.queries,
+            "forced_false": self.forced,
+            "phases": self.phases,
+            "segments": n_segments,      # maximal compiled blocking runs
+        }
+        # commit the memoization cache only on success
+        if self.cache is not None:
+            for st in mods:
+                if st.gen is None and st.cand is not None:
+                    continue             # full cache replay: nothing new
+                self.cache.store(self.sig, st.mid,
+                                 _CachedRun(st.ylog, st.sends))
+        return SimResult(
+            program=program.name,
+            outputs=dict(self.outputs),
+            cycles=cycles,
+            engine="omnisim-hybrid",
+            stats=stats,
+            graph=engine,
+            constraints=constraints,
+            depths=program.depths(),
+        )
+
+
+def simulate_hybrid(program: Program, max_steps: int = 50_000_000,
+                    cache: Optional[HybridCache] = None) -> SimResult:
+    """Segmented trace-compiled simulation for dynamic designs.
+
+    Records and array-replays the blocking segments between NB/probe query
+    points, interpreting only at the queries (paper Sec. 5.1 applied to
+    Type B/C designs).  Returns a :class:`~repro.core.program.SimResult`
+    indistinguishable from the generator engine's, with
+    ``engine="omnisim-hybrid"`` and a pre-built incremental cache so
+    ``resimulate``/``resimulate_batch`` work unchanged.  ``cache`` (a
+    :class:`HybridCache`) memoizes module yield streams across repeated
+    simulations of the same design shape.  Raises
+    :class:`TraceUnsupported` on deadlocks and SPSC violations; callers
+    normally go through ``repro.core.simulate(..., trace="auto")`` which
+    falls back to the generator engine for the paper-exact report.
+    """
+    return HybridSim(program, cache=cache, max_steps=max_steps).run()

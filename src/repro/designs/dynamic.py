@@ -1,0 +1,77 @@
+"""Dynamic (Type B/C) benchmark designs beyond the paper's Table 4.
+
+The paper designs (``designs/paper.py``) are query-*dominated*: most of
+their ops are NB accesses or probes, so every engine pays per-query
+interpretation.  The designs here have the opposite profile — deep blocking
+pipelines with *sparse* query points — which is exactly where the hybrid
+segmented replay (``core/trace.py::simulate_hybrid``) shines: the blocking
+segments compile to flat arrays and only the occasional query drops to the
+generator protocol.
+
+Module order matters for the ``trace="auto"`` probe cost: the NB module
+comes first so the straight-line recorder aborts to the hybrid path after a
+single op instead of replaying a whole pipeline stage.
+"""
+from __future__ import annotations
+
+from ..core.program import Delay, Emit, Program, Read, ReadNB, Write
+
+
+def watchdog_pipe(items: int = 2048, stages: int = 4, depth: int = 16,
+                  poll_gap: int = 64) -> Program:
+    """A skynet-like blocking pipeline supervised by a polling watchdog.
+
+    ``stages`` blocking stages stream ``items`` elements (the Type A bulk of
+    the design); the sink signals completion on a ``done`` FIFO, and a
+    watchdog polls it with a non-blocking read every ``poll_gap`` cycles —
+    the classic status-register pattern no decoupled simulator can time.
+    Queries are ~``cycles / poll_gap`` of the op stream, so the hybrid
+    engine compiles almost everything.
+    """
+    prog = Program("watchdog_pipe", declared_type="C")
+    done = prog.fifo("done", 1)
+    links = [prog.fifo(f"s{i}", depth) for i in range(stages + 1)]
+
+    @prog.module("watchdog")          # first: auto-probe bails out fast
+    def watchdog():
+        polls = 0
+        while True:
+            ok, _ = yield ReadNB(done)
+            polls += 1
+            if ok:
+                break
+            yield Delay(poll_gap - 1)
+        yield Emit("polls", polls)
+
+    @prog.module("source")
+    def source():
+        for i in range(items):
+            yield Write(links[0], (i * 7 + 3) % 251)
+
+    def make_stage(k: int):
+        def stage():
+            acc = 0
+            for _ in range(items):
+                v = yield Read(links[k])
+                acc = (acc + v) % 65521
+                yield Write(links[k + 1], (v * 3 + k) % 251)
+            yield Emit(f"stage{k}_acc", acc)
+        return stage
+
+    for k in range(stages):
+        prog.add_module(f"stage{k}", make_stage(k))
+
+    @prog.module("sink")
+    def sink():
+        total = 0
+        for _ in range(items):
+            total += (yield Read(links[stages]))
+        yield Write(done, 1)
+        yield Emit("checksum", total)
+
+    return prog
+
+
+DYNAMIC_DESIGNS = {
+    "watchdog_pipe": watchdog_pipe,
+}

@@ -1,0 +1,101 @@
+"""BENCH_core.json schema: benchmark refactors cannot silently drop keys.
+
+Two layers (ISSUE 3 satellite):
+
+  * tier-1: the *committed* ``BENCH_core.json`` must carry every required
+    key with the right type — including every key the docs
+    (``docs/dse_guide.md``) document, so docs and benchmarks cannot drift;
+  * ``bench``-marked smoke: actually run ``benchmarks/run.py --quick`` into
+    a temp file and validate the freshly-written output the same way.
+"""
+import json
+import numbers
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# key -> required type; int-valued counters are exact, timings are floats
+REQUIRED_KEYS = {
+    # PR 1: depth-batched DSE trajectory
+    "full_sim_us": numbers.Real,
+    "looped_resimulate_us_per_config": numbers.Real,
+    "batched_resimulate_us_per_config": numbers.Real,
+    "batch_speedup_vs_loop": numbers.Real,
+    "batch_K": numbers.Integral,
+    "batch_reused": numbers.Integral,
+    # PR 2: trace-compiled initial simulation
+    "initial_sim_generator_us": numbers.Real,
+    "initial_sim_trace_us": numbers.Real,
+    "trace_replay_speedup_initial": numbers.Real,
+    "trace_ops": numbers.Integral,
+    "trace_ops_stored_after_periodization": numbers.Integral,
+    # PR 3: hybrid segmented replay on dynamic designs
+    "hybrid_replay_speedup_fig2_timer": numbers.Real,
+    "hybrid_replay_speedup_branch": numbers.Real,
+    "hybrid_replay_speedup_multicore": numbers.Real,
+    "hybrid_replay_speedup_watchdog_pipe": numbers.Real,
+    "hybrid_sim_generator_us_watchdog_pipe": numbers.Real,
+    "hybrid_sim_hybrid_us_watchdog_pipe": numbers.Real,
+    "hybrid_queries_watchdog_pipe": numbers.Integral,
+    "hybrid_ops_watchdog_pipe": numbers.Integral,
+}
+
+_DOC_KEY = re.compile(r"^\|\s*`([a-z0-9_]+)`\s*\|", re.MULTILINE)
+
+
+def _validate(data: dict, origin: str) -> None:
+    missing = [k for k in REQUIRED_KEYS if k not in data]
+    assert not missing, f"{origin} is missing keys: {missing}"
+    bad = [k for k, t in REQUIRED_KEYS.items()
+           if not isinstance(data[k], t) or isinstance(data[k], bool)]
+    assert not bad, f"{origin} has wrongly-typed keys: {bad}"
+    nonpos = [k for k in REQUIRED_KEYS if not data[k] > 0]
+    assert not nonpos, f"{origin} has non-positive values: {nonpos}"
+
+
+def test_committed_bench_core_schema():
+    with open(os.path.join(REPO, "BENCH_core.json")) as f:
+        data = json.load(f)
+    _validate(data, "BENCH_core.json")
+
+
+def test_documented_keys_exist_in_committed_file():
+    """Every key the dse_guide's schema table documents must be present in
+    the committed file (and required above, so benchmarks keep writing it)."""
+    with open(os.path.join(REPO, "docs", "dse_guide.md")) as f:
+        doc_keys = set(_DOC_KEY.findall(f.read()))
+    assert doc_keys, "docs/dse_guide.md schema table not found"
+    with open(os.path.join(REPO, "BENCH_core.json")) as f:
+        data = json.load(f)
+    missing = sorted(doc_keys - set(data))
+    assert not missing, f"documented but absent from BENCH_core.json: {missing}"
+    undeclared = sorted(doc_keys - set(REQUIRED_KEYS))
+    assert not undeclared, (
+        f"documented keys not pinned by REQUIRED_KEYS (add them): "
+        f"{undeclared}")
+
+
+@pytest.mark.bench
+def test_quick_benchmark_writes_valid_schema(tmp_path):
+    """``benchmarks/run.py --quick`` must regenerate every required key."""
+    out = tmp_path / "BENCH_core.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--quick",
+         "--out", str(out)],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    with open(out) as f:
+        data = json.load(f)
+    _validate(data, "quick-mode output")
+    # the quick refresh must produce the same key set as the committed file
+    with open(os.path.join(REPO, "BENCH_core.json")) as f:
+        committed = json.load(f)
+    assert set(data) == set(committed)

@@ -297,6 +297,53 @@ def test_lightningsim_rejects_nb():
         LightningSim(prog).run()
 
 
+def test_forced_false_tie_same_cycle():
+    """Two symmetric pollers issue queries at the same cycle: the earliest-
+    query rule must break the tie deterministically and — because any event
+    committing after the tied cycle can satisfy neither query — the
+    resolution order must not matter.  Generator, shuffled-generator,
+    hybrid and RTL oracle all agree, including the forced-false count."""
+    def build():
+        prog = Program("tie", declared_type="C")
+        ab = prog.fifo("ab", 1)
+        ba = prog.fifo("ba", 1)
+
+        @prog.module("a")
+        def a():
+            hits = 0
+            for _ in range(6):
+                ok, _v = yield ReadNB(ba)
+                hits += int(ok)
+            yield WriteNB(ab, 1)
+            yield Emit("a_hits", hits)
+
+        @prog.module("b")
+        def b():
+            hits = 0
+            for _ in range(6):
+                ok, _v = yield ReadNB(ab)
+                hits += int(ok)
+            yield WriteNB(ba, 2)
+            yield Emit("b_hits", hits)
+
+        return prog
+
+    g = simulate(build(), trace="never")
+    h = simulate(build(), trace="always")
+    r = simulate_rtl(build())
+    assert h.engine == "omnisim-hybrid"
+    assert g.outputs == h.outputs == r.outputs
+    assert g.cycles == h.cycles == r.cycles
+    # identical SimStats on both paths — the tie is resolved the same way
+    assert g.stats.queries == h.stats.queries
+    assert g.stats.queries_forced_false == h.stats.queries_forced_false >= 2
+    assert g.stats.nodes == h.stats.nodes
+    assert g.stats.edges == h.stats.edges
+    for seed in range(4):
+        s = simulate(build(), trace="never", shuffle_seed=seed)
+        assert s.outputs == g.outputs and s.cycles == g.cycles
+
+
 def test_dead_probe_elimination():
     def build(used):
         prog = Program("deadprobe", declared_type="C")

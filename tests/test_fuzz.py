@@ -1,0 +1,124 @@
+"""Differential fuzzing: generator vs trace vs hybrid vs incremental.
+
+The hybrid engine's contract (ISSUE 3) is *bit-identical* results on every
+design the generator engine can simulate.  ``fuzz_designs.build_case``
+derives seeded random Programs covering the whole taxonomy — blocking
+pipelines, NB drop/poll patterns, probes, watchdogs, cyclic credit loops,
+true deadlocks — and every case is cross-checked:
+
+  * ``trace="never"`` (generator reference) vs ``trace="auto"`` (straight-
+    line trace, hybrid, or generator fallback — whatever auto selects):
+    outputs, cycles, deadlock verdict + stall cycle, node-time multiset,
+    FIFO tables, constraint count and the schedule-independent stats;
+  * ``shuffle_seed`` sweeps: the generator engine under randomized task
+    servicing must reproduce the same results (paper's determinism claim);
+  * ``resimulate``/``resimulate_batch`` from a hybrid-compiled base vs a
+    generator base, and against from-scratch simulation;
+  * :class:`~repro.core.trace.HybridCache` memoized re-runs vs fresh runs.
+
+~200 seeded cases run in tier-1; a slow-marked long tail scales the same
+seeds up.  No hypothesis dependency — plain seeded randomness.
+"""
+import numpy as np
+import pytest
+
+from fuzz_designs import build_case
+from repro.core import resimulate, resimulate_batch, simulate
+from repro.core.trace import HybridCache
+
+N_TIER1_SEEDS = 208
+
+
+def _assert_equal(g, a, seed, check_stats=True):
+    assert a.outputs == g.outputs, seed
+    assert a.cycles == g.cycles, seed
+    assert a.deadlock == g.deadlock, seed
+    assert a.deadlock_cycle == g.deadlock_cycle, seed
+    assert a.depths == g.depths, seed
+    if g.deadlock:
+        return
+    assert len(a.constraints) == len(g.constraints), seed
+    if check_stats:
+        assert a.stats.nodes == g.stats.nodes, seed
+        assert a.stats.edges == g.stats.edges, seed
+        assert a.stats.queries == g.stats.queries, seed
+        assert a.stats.skipped_probes == g.stats.skipped_probes, seed
+    g1, g2 = g.graph.graph, a.graph.graph
+    assert g1.n_nodes == g2.n_nodes and g1.n_edges == g2.n_edges, seed
+    assert sorted(g1.times()) == sorted(g2.times()), seed
+    for t1, t2 in zip(g.graph.fifos, a.graph.fifos):
+        np.testing.assert_array_equal(np.sort(t1.write_times),
+                                      np.sort(t2.write_times))
+        np.testing.assert_array_equal(np.sort(t1.read_times),
+                                      np.sort(t2.read_times))
+        assert list(t1.values) == list(t2.values), seed
+
+
+def _run_case(seed, scale=1):
+    builder, meta = build_case(seed, scale=scale)
+    g = simulate(builder(), trace="never")
+    a = simulate(builder(), trace="auto")
+    _assert_equal(g, a, (seed, meta))
+
+    if seed % 4 == 0:
+        # schedule independence: shuffled generator servicing order
+        for s in (1, 7):
+            r = simulate(builder(), trace="never", shuffle_seed=s)
+            assert r.outputs == g.outputs, (seed, s, meta)
+            assert r.cycles == g.cycles, (seed, s, meta)
+            assert r.deadlock == g.deadlock, (seed, s, meta)
+
+    if seed % 4 == 1 and not g.deadlock:
+        # incremental/batched re-simulation differential (hybrid base vs
+        # generator base vs from-scratch)
+        rng = np.random.default_rng(seed)
+        D = rng.integers(1, 8, size=(4, len(g.depths)))
+        og = resimulate_batch(g, D)
+        oa = resimulate_batch(a, D)
+        np.testing.assert_array_equal(og.ok, oa.ok, err_msg=str(seed))
+        np.testing.assert_array_equal(og.cycles, oa.cycles,
+                                      err_msg=str(seed))
+        np.testing.assert_array_equal(og.status, oa.status,
+                                      err_msg=str(seed))
+        dv = tuple(int(x) for x in D[0])
+        inc = resimulate(a, dv)
+        full = simulate(builder(), depths=dv, trace="never")
+        assert inc.result.cycles == full.cycles, (seed, dv)
+        assert inc.result.deadlock == full.deadlock, (seed, dv)
+        assert inc.result.outputs == full.outputs, (seed, dv)
+
+    if seed % 8 == 2:
+        # memoized hybrid re-runs must stay exact (cache replay + divergence)
+        cache = HybridCache()
+        r1 = simulate(builder(), trace="auto", hybrid_cache=cache)
+        r2 = simulate(builder(), trace="auto", hybrid_cache=cache)
+        _assert_equal(r1, r2, (seed, "memo-rerun"))
+        dv = tuple(max(1, d // 2) for d in g.depths)
+        rc = simulate(builder(), depths=dv, trace="auto", hybrid_cache=cache)
+        rf = simulate(builder(), depths=dv, trace="never")
+        _assert_equal(rf, rc, (seed, "memo-depths", dv))
+
+
+@pytest.mark.parametrize("seed", range(N_TIER1_SEEDS))
+def test_fuzz_differential(seed):
+    _run_case(seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(N_TIER1_SEEDS, N_TIER1_SEEDS + 100))
+def test_fuzz_differential_long_tail(seed):
+    _run_case(seed, scale=6)
+
+
+def test_fuzz_covers_all_engines():
+    """The seed range must actually exercise every path: straight-line
+    trace, hybrid, generator fallback, and deadlock verdicts."""
+    engines = set()
+    deadlocks = 0
+    for seed in range(N_TIER1_SEEDS):
+        builder, _ = build_case(seed)
+        r = simulate(builder(), trace="auto")
+        engines.add(r.engine)
+        deadlocks += int(r.deadlock)
+    assert engines == {"omnisim", "omnisim-trace", "omnisim-hybrid"}
+    assert deadlocks >= 5

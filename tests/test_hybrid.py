@@ -1,0 +1,215 @@
+"""Hybrid trace compilation (ISSUE 3): exactness, downstream reuse, memo.
+
+The contract: ``simulate(p, trace="auto")`` on a dynamic (NB/probe) design
+takes the hybrid segmented replay and produces a ``SimResult``
+indistinguishable from the generator engine's — outputs, cycles, deadlock
+reports, graph shape and times, FIFO tables, constraints, and the
+schedule-independent stats — while ``resimulate``/``resimulate_batch``
+work unchanged on the pre-built incremental cache.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (classify, classify_dynamic, longest_path_numpy,
+                        resimulate, resimulate_batch, simulate)
+from repro.core.program import Delay, Emit, Program, Read, ReadNB, Write
+from repro.core.trace import HybridCache, TraceUnsupported, simulate_hybrid
+from repro.designs.dynamic import DYNAMIC_DESIGNS, watchdog_pipe
+from repro.designs.paper import PAPER_DESIGNS
+
+# every paper design with live NB/probe control flow must take the hybrid
+# path under auto (deadlock stays on the generator path; fig4_ex3 is
+# blocking-only and stays on the straight-line trace path)
+_HYBRID_SMALL = {
+    "fig4_ex2": lambda: PAPER_DESIGNS["fig4_ex2"](n=64),
+    "fig4_ex4a": lambda: PAPER_DESIGNS["fig4_ex4a"](n=64),
+    "fig4_ex4a_d": lambda: PAPER_DESIGNS["fig4_ex4a_d"](n=64),
+    "fig4_ex4b": lambda: PAPER_DESIGNS["fig4_ex4b"](n=64),
+    "fig4_ex4b_d": lambda: PAPER_DESIGNS["fig4_ex4b_d"](n=64),
+    "fig4_ex5": lambda: PAPER_DESIGNS["fig4_ex5"](n=64),
+    "fig2_timer": lambda: PAPER_DESIGNS["fig2_timer"](n=64),
+    "branch": lambda: PAPER_DESIGNS["branch"](prog_len=128),
+    "multicore": lambda: PAPER_DESIGNS["multicore"](cores=4, prog_len=32),
+    "watchdog_pipe": lambda: watchdog_pipe(items=96, stages=2, depth=4,
+                                           poll_gap=16),
+}
+
+
+def _assert_bit_identical(g, h, name):
+    assert h.outputs == g.outputs, name
+    assert h.cycles == g.cycles, name
+    assert h.deadlock == g.deadlock, name
+    assert h.depths == g.depths, name
+    assert h.stats.nodes == g.stats.nodes, name
+    assert h.stats.edges == g.stats.edges, name
+    assert h.stats.queries == g.stats.queries, name
+    assert h.stats.queries_forced_false == g.stats.queries_forced_false, name
+    assert h.stats.skipped_probes == g.stats.skipped_probes, name
+    assert len(h.constraints) == len(g.constraints), name
+    g1, g2 = g.graph.graph, h.graph.graph
+    assert g1.n_nodes == g2.n_nodes and g1.n_edges == g2.n_edges, name
+    assert sorted(g1.times()) == sorted(g2.times()), name
+    for t1, t2 in zip(g.graph.fifos, h.graph.fifos):
+        np.testing.assert_array_equal(np.sort(t1.write_times),
+                                      np.sort(t2.write_times))
+        np.testing.assert_array_equal(np.sort(t1.read_times),
+                                      np.sort(t2.read_times))
+        assert list(t1.values) == list(t2.values), name
+
+
+# ----------------------------------------------------------- exactness sweep
+@pytest.mark.parametrize("name", sorted(_HYBRID_SMALL))
+def test_hybrid_equals_generator(name):
+    b = _HYBRID_SMALL[name]
+    g = simulate(b(), trace="never")
+    h = simulate(b(), trace="auto")
+    assert h.engine == "omnisim-hybrid", name
+    _assert_bit_identical(g, h, name)
+
+
+@pytest.mark.parametrize("name", sorted(_HYBRID_SMALL))
+def test_hybrid_graph_satisfies_csr_contract(name):
+    """TraceSimGraph over a segmented run: CSR longest path reproduces the
+    eager times (NB_FAIL/PROBE nodes included), and node materialization
+    feeds the taxonomy classifier."""
+    b = _HYBRID_SMALL[name]
+    h = simulate(b(), trace="auto")
+    graph = h.graph.graph
+    indptr, src, wgt, base = graph.to_csr()
+    np.testing.assert_array_equal(
+        longest_path_numpy(indptr, src, wgt, base), graph.times())
+    c = classify(b(), h)
+    assert c.has_nonblocking, name
+
+
+# --------------------------------------------------- downstream incremental
+@pytest.mark.parametrize("name", ["fig4_ex5", "fig2_timer", "branch",
+                                  "watchdog_pipe"])
+def test_resimulate_batch_from_hybrid_base(name):
+    """The pre-built CompiledGraph of a hybrid run must drive
+    resimulate/resimulate_batch verdict-for-verdict like a generator base."""
+    b = _HYBRID_SMALL[name]
+    base_h = simulate(b(), trace="auto")
+    base_g = simulate(b(), trace="never")
+    assert getattr(base_h.graph, "_incr_cache", None) is not None
+    rng = np.random.default_rng(17)
+    D = rng.integers(1, 9, size=(12, len(base_h.depths)))
+    oh = resimulate_batch(base_h, D)
+    og = resimulate_batch(base_g, D)
+    np.testing.assert_array_equal(oh.ok, og.ok)
+    np.testing.assert_array_equal(oh.cycles, og.cycles)
+    np.testing.assert_array_equal(oh.status, og.status)
+    dv = tuple(int(x) for x in D[0])
+    ih = resimulate(base_h, dv)
+    full = simulate(b(), depths=dv, trace="never")
+    assert ih.result.cycles == full.cycles
+    assert ih.result.outputs == full.outputs
+
+
+# ------------------------------------------------------- segment memoization
+def test_cache_full_replay_skips_generators():
+    cache = HybridCache()
+    b = _HYBRID_SMALL["fig2_timer"]
+    r1 = simulate(b(), trace="auto", hybrid_cache=cache)
+    assert cache.hits == 0 and cache.misses == 3
+    r2 = simulate(b(), trace="auto", hybrid_cache=cache)
+    assert cache.hits == 3 and cache.divergences == 0
+    _assert_bit_identical(r1, r2, "memo")
+
+
+def test_cache_divergence_and_branch_reconvergence():
+    """Perturbed depths flip NB outcomes: the first divergent run
+    materializes generators; revisiting a previously-seen depth vector
+    switches back to the stored branch instead of re-running them."""
+    cache = HybridCache()
+    b = lambda: PAPER_DESIGNS["fig4_ex4b"](n=64)
+    base = simulate(b(), trace="auto", hybrid_cache=cache)
+    r1 = simulate(b(), depths=(1,), trace="auto", hybrid_cache=cache)
+    assert cache.divergences >= 1          # outcomes genuinely changed
+    g1 = simulate(b(), depths=(1,), trace="never")
+    _assert_bit_identical(g1, r1, "diverged run")
+    assert r1.outputs != base.outputs      # the witness classify hunts for
+    before = cache.divergences
+    r2 = simulate(b(), depths=(1,), trace="auto", hybrid_cache=cache)
+    assert cache.divergences == before     # replayed from the stored branch
+    assert cache.hits + cache.switches >= 2
+    _assert_bit_identical(g1, r2, "reconverged run")
+
+
+def test_classify_dynamic_uses_shared_cache():
+    c = classify_dynamic(lambda: PAPER_DESIGNS["fig4_ex4b"](n=64))
+    assert c.dtype == "C"
+    c2 = classify_dynamic(lambda: PAPER_DESIGNS["fig2_timer"](n=64))
+    assert c2.dtype == "C"
+    c3 = classify_dynamic(lambda: PAPER_DESIGNS["fig4_ex2"](n=64))
+    assert c3.dtype == "B"
+
+
+def test_cache_fast_forward_through_probes_and_delays():
+    """Divergence materialization must fast-forward the fresh generator
+    through every yield class in the cached prefix — dead probes, delays,
+    emits, blocking ops — before resuming live at the diverged query."""
+    from repro.core.program import Full, WriteNB
+
+    def build():
+        prog = Program("ffwd", declared_type="C")
+        f = prog.fifo("f", 3)
+
+        @prog.module("p")
+        def p():
+            dropped = 0
+            yield Emit("banner", "ffwd")
+            for i in range(8):
+                yield Full(f, used=False)      # dead probe in the prefix
+                yield Delay(1)
+                ok = yield WriteNB(f, i)       # outcome flips with depth
+                if not ok:
+                    dropped += 1
+            yield Emit("dropped", dropped)
+
+        @prog.module("c")
+        def c():
+            total = 0
+            for _ in range(6):
+                ok, v = yield ReadNB(f)
+                if ok:
+                    total += v
+                yield Delay(2)
+            yield Emit("got", total)
+
+        return prog
+
+    cache = HybridCache()
+    base = simulate(build(), trace="auto", hybrid_cache=cache)
+    for dv in ((1,), (8,), (2,), (1,)):
+        r = simulate(build(), depths=dv, trace="auto", hybrid_cache=cache)
+        g = simulate(build(), depths=dv, trace="never")
+        _assert_bit_identical(g, r, dv)
+    assert cache.divergences >= 1              # materialization exercised
+    assert base.outputs["banner"] == "ffwd"
+
+
+# ----------------------------------------------------------------- plumbing
+def test_watchdog_registered_and_hybrid_info():
+    assert "watchdog_pipe" in DYNAMIC_DESIGNS
+    h = simulate(watchdog_pipe(items=64, stages=2, depth=4, poll_gap=8),
+                 trace="always")
+    assert h.engine == "omnisim-hybrid"
+    info = h.graph._hybrid
+    assert info["queries"] > 0 and info["ops"] > info["queries"]
+    assert info["segments"] >= 3           # compiled blocking runs exist
+
+
+def test_trace_always_raises_only_when_hybrid_cannot_help():
+    # deadlock: even the hybrid path defers to the generator engine
+    with pytest.raises(TraceUnsupported):
+        simulate(PAPER_DESIGNS["deadlock"](n=8), trace="always")
+    # dynamic control flow alone: handled, no raise
+    r = simulate(PAPER_DESIGNS["fig2_timer"](n=32), trace="always")
+    assert r.engine == "omnisim-hybrid"
+
+
+def test_simulate_hybrid_direct_entry():
+    r = simulate_hybrid(PAPER_DESIGNS["branch"](prog_len=64))
+    g = simulate(PAPER_DESIGNS["branch"](prog_len=64), trace="never")
+    _assert_bit_identical(g, r, "direct")

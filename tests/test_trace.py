@@ -12,7 +12,8 @@ import pytest
 
 from repro.core import (classify, resimulate, resimulate_batch, simulate,
                         longest_path_numpy)
-from repro.core.program import Delay, Emit, Program, Read, ReadNB, Write
+from repro.core.program import (Delay, Emit, Program, Read, ReadNB, Write,
+                                WriteNB)
 from repro.core.trace import (TraceUnsupported, compile_trace, record_trace,
                               simulate_traced)
 from repro.designs.paper import PAPER_DESIGNS
@@ -122,9 +123,10 @@ def test_depth_delay_sweep_compiled(depth, delay):
 
 
 # ------------------------------------------------------- fallback behaviour
-def test_data_dependent_control_flow_falls_back():
-    """An NB outcome steering control flow cannot be trace-compiled: 'always'
-    raises, 'auto' silently uses the generator path with the same result."""
+def test_data_dependent_control_flow_takes_hybrid_path():
+    """An NB outcome steering control flow cannot be straight-line compiled
+    (``simulate_traced`` raises) — since PR 3 the hybrid segmented replay
+    handles it: both 'always' and 'auto' return the hybrid result, exact."""
     def build():
         prog = Program("poll", declared_type="B")
         f = prog.fifo("f", 2)
@@ -147,10 +149,11 @@ def test_data_dependent_control_flow_falls_back():
         return prog
 
     with pytest.raises(TraceUnsupported):
-        simulate(build(), trace="always")
-    r = simulate(build(), trace="auto")
-    assert r.engine == "omnisim"
+        simulate_traced(build())          # the straight-line path still bails
+    r = simulate(build(), trace="always")
+    assert r.engine == "omnisim-hybrid"
     _assert_equal_results(simulate(build(), trace="never"), r)
+    assert r.outputs == {"polls": 12}
 
 
 def test_deadlock_falls_back_with_exact_stall_cycle():
@@ -224,6 +227,80 @@ def test_war_cycle_deadlock_falls_back():
     r = simulate(burst(1), trace="auto")
     assert r.deadlock
     _assert_equal_results(simulate(burst(1), trace="never"), r)
+
+
+def test_hybrid_deadlock_mid_segment_falls_back_exact():
+    """A design whose queries resolve fine until a blocking read that can
+    never be satisfied: the hybrid engine must detect the mid-run deadlock,
+    refuse (TraceUnsupported), and 'auto' must reproduce the generator
+    engine's exact stall cycle, outputs and stats."""
+    def build():
+        prog = Program("dl_mid", declared_type="C")
+        data = prog.fifo("data", 2)
+        done = prog.fifo("done", 1)
+
+        @prog.module("p")
+        def p():
+            sent = 0
+            for i in range(4):
+                ok = yield WriteNB(data, i)
+                sent += int(ok)
+            _ = yield Read(done)      # never written: deadlock mid-segment
+            yield Emit("sent", sent)
+
+        @prog.module("c")
+        def c():
+            total = 0
+            for _ in range(3):
+                ok, v = yield ReadNB(data)
+                if ok:
+                    total += v
+                yield Delay(1)
+            yield Emit("got", total)
+
+        return prog
+
+    from repro.core.trace import simulate_hybrid
+    with pytest.raises(TraceUnsupported):
+        simulate_hybrid(build())
+    g = simulate(build(), trace="never")
+    a = simulate(build(), trace="auto")
+    assert a.engine == "omnisim"          # generator owns the deadlock report
+    assert g.deadlock and a.deadlock
+    assert a.deadlock_cycle == g.deadlock_cycle
+    assert a.outputs == g.outputs         # includes __deadlock__ blocked set
+    assert a.stats.queries == g.stats.queries
+    assert a.stats.queries_forced_false == g.stats.queries_forced_false
+
+
+def test_hybrid_spsc_violation_falls_back_to_engine_assertion():
+    """Two readers on one FIFO in an NB design: the hybrid recorder defers
+    and the generator engine's endpoint check raises the same
+    AssertionError it always has."""
+    def build():
+        prog = Program("spsc_nb", declared_type="C")
+        f = prog.fifo("f", 2)
+
+        @prog.module("p")
+        def p():
+            for i in range(4):
+                yield WriteNB(f, i)
+
+        @prog.module("c1")
+        def c1():
+            yield Read(f)
+
+        @prog.module("c2")
+        def c2():
+            yield Read(f)
+
+        return prog
+
+    from repro.core.trace import simulate_hybrid
+    with pytest.raises(TraceUnsupported):
+        simulate_hybrid(build())
+    with pytest.raises(AssertionError, match="SPSC"):
+        simulate(build(), trace="auto")
 
 
 def test_spsc_violation_still_raises_engine_assertion():

@@ -10,7 +10,7 @@ re-simulation, trace-compiled and hybrid segmented initial simulation) to
 ``BENCH_core.json`` so future PRs have a machine-readable trajectory to
 compare against.
 
-``--quick`` runs only the three key-producing benchmarks at reduced sizes —
+``--quick`` runs only the four key-producing benchmarks at reduced sizes —
 every required key is still written (tests/test_bench_schema.py validates
 the schema), but the values are not comparable with the full-size
 trajectory, so quick output defaults to ``BENCH_core.quick.json`` (or
@@ -30,6 +30,7 @@ def main(quick: bool = False, out: str = None) -> None:
                                    pipeline_table, table3_funcsim,
                                    table5_vs_decoupled, table6_batch_dse,
                                    table6_incremental, table_hybrid_replay,
+                                   table_query_periodization,
                                    table_trace_replay)
     rows = []
     if not quick:
@@ -41,6 +42,7 @@ def main(quick: bool = False, out: str = None) -> None:
     rows += table6_batch_dse()
     rows += table_trace_replay()
     rows += table_hybrid_replay()
+    rows += table_query_periodization()
     if not quick:
         rows += pipeline_table()
     print("\n== CSV (name,us_per_call,derived) ==")

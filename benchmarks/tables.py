@@ -283,6 +283,64 @@ def table_hybrid_replay() -> List[str]:
     return rows
 
 
+# ---------------------------------------- Sec 5.1 query periodization burst
+def table_query_periodization() -> List[str]:
+    """Steady-state query periodization on poll-dominated designs
+    (ISSUE 4 acceptance: >= 4x on fig2_timer).
+
+    The hybrid engine's poll-loop detector resolves K definitively-false
+    outcomes per burst against the committed FIFO tables instead of one
+    generator resumption + Table-2 resolution per query.  fig2_timer is the
+    uniform-gap poll loop (one burst covers the whole run); fig2_poll_burst
+    cycles through non-uniform gaps, so the detector re-arms per constant-
+    gap run and the divergence fallback is on the measured path too.
+    Writes ``query_periodization_*`` keys into BENCH_core.json.
+    """
+    from repro.designs.dynamic import fig2_poll_burst
+
+    rows = []
+    print("\n== Sec 5.1 periodization: poll loops vs generator engine ==")
+    print(f"{'design':16s} {'gen ms':>8s} {'hybrid ms':>10s} {'speedup':>8s} "
+          f"{'queries':>8s} {'bulk':>8s} {'bursts':>7s} {'same?':>6s}")
+    if QUICK:
+        cases = {
+            "fig2_timer": lambda: PAPER_DESIGNS["fig2_timer"](n=512),
+            "fig2_poll_burst": lambda: fig2_poll_burst(items=512, stages=2),
+        }
+    else:
+        cases = {
+            "fig2_timer": lambda: PAPER_DESIGNS["fig2_timer"](),
+            "fig2_poll_burst": lambda: fig2_poll_burst(),
+        }
+    for name, builder in cases.items():
+        gen, t_gen = _timeit(lambda: simulate(builder(), trace="never"),
+                             repeats=2 if QUICK else 3)
+        hyb, t_hyb = _timeit(lambda: simulate(builder(), trace="always"),
+                             repeats=2 if QUICK else 3)
+        assert hyb.engine == "omnisim-hybrid", name
+        same = (gen.outputs == hyb.outputs and gen.cycles == hyb.cycles
+                and gen.stats.queries == hyb.stats.queries
+                and gen.stats.queries_forced_false
+                == hyb.stats.queries_forced_false)
+        info = hyb.graph._hybrid
+        spd = t_gen / t_hyb
+        print(f"{name:16s} {t_gen*1e3:7.1f} {t_hyb*1e3:9.1f} {spd:7.2f}x "
+              f"{info['queries']:8d} {info['bulk_queries']:8d} "
+              f"{info['bursts']:7d} {'YES' if same else 'NO':>6s}")
+        rows.append(f"query_periodization/{name},{t_hyb*1e6:.0f},"
+                    f"speedup_vs_generator={spd:.2f};"
+                    f"bulk={info['bulk_queries']};exact_match={same}")
+        BENCH_CORE[f"query_periodization_speedup_{name}"] = spd
+        if name == "fig2_timer":
+            BENCH_CORE.update({
+                "query_periodization_sim_generator_us_fig2_timer": t_gen * 1e6,
+                "query_periodization_sim_hybrid_us_fig2_timer": t_hyb * 1e6,
+                "query_periodization_bulk_queries_fig2_timer":
+                    int(info["bulk_queries"]),
+            })
+    return rows
+
+
 # -------------------------------------------------- Fig 8(b) scaling regime
 def fig8_speed_scaling() -> List[str]:
     """Event-driven vs cycle-stepped scaling: speedup grows with idle cycles

@@ -529,7 +529,7 @@ class OmniSim:
 
 def simulate(program: Program, depths=None, shuffle_seed: Optional[int] = None,
              max_steps: int = 50_000_000, trace: str = "auto",
-             hybrid_cache=None) -> SimResult:
+             hybrid_cache=None, periodize: bool = True) -> SimResult:
     """Run the OmniSim engine on ``program`` (optionally overriding depths).
 
     ``trace`` selects the initial-simulation strategy:
@@ -553,7 +553,12 @@ def simulate(program: Program, depths=None, shuffle_seed: Optional[int] = None,
     module yield streams across repeated simulations of the same design
     shape — ``classify_dynamic`` threads one through its perturbed-depth
     probe runs so unchanged modules replay without re-running their
-    generators.
+    generators (validated cached segments replay array-at-a-time, so the
+    probe runs are near-free).  ``periodize`` (default True) enables the
+    hybrid path's steady-state query periodization — fixed poll loops
+    resolve their definitively-false outcomes in bulk against the
+    committed FIFO tables (``SimStats.queries_periodized`` counts them) —
+    and only affects speed, never results.
 
     A non-``None`` ``shuffle_seed`` implies the generator path: the point
     of shuffling is to randomize actual task servicing order, which the
@@ -583,7 +588,8 @@ def simulate(program: Program, depths=None, shuffle_seed: Optional[int] = None,
             if exc.dynamic:
                 try:
                     return _trace.simulate_hybrid(program, max_steps=max_steps,
-                                                  cache=hybrid_cache)
+                                                  cache=hybrid_cache,
+                                                  periodize=periodize)
                 except _trace.TraceUnsupported:
                     if trace == "always":
                         raise        # the hybrid verdict is the precise one

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Any, NamedTuple, Optional
 
 
 class NodeKind(enum.Enum):
@@ -103,14 +103,15 @@ class Query:
         return self.source_seq
 
 
-@dataclass
-class Constraint:
+class Constraint(NamedTuple):
     """Outcome of a resolved query, recorded for incremental re-simulation.
 
     On a FIFO-depth change, finalization is re-run and every constraint is
     re-evaluated against the new node times; if any query would now resolve
     differently, the simulation graph is invalid and a full re-sim is needed
-    (paper Sec. 7.2).
+    (paper Sec. 7.2).  A NamedTuple rather than a dataclass: query-dominated
+    designs materialize one record per query, and construction cost is on
+    the hot path of both the generator engine and the hybrid replay.
     """
 
     rtype: RequestType
@@ -128,6 +129,9 @@ class SimStats:
     edges: int = 0
     queries: int = 0
     queries_forced_false: int = 0   # resolved by the earliest-query rule
+    queries_periodized: int = 0     # resolved in bulk by query periodization
+                                    # (hybrid engine poll-loop bursts; the
+                                    # generator engine always reports 0)
     quiescence_rounds: int = 0
     resumes: int = 0
     skipped_probes: int = 0         # dead-query elimination (paper Sec. 7.3.2)

@@ -59,55 +59,77 @@ from typing import Any, Callable, Dict, Generator, List, Optional, Tuple
 
 
 # --------------------------------------------------------------------------
-# Ops
+# Ops — slotted plain classes, not dataclasses: one op object is constructed
+# per yielded operation, so __init__ is on the hot path of every engine
+# (frozen-dataclass construction costs an object.__setattr__ per field).
 # --------------------------------------------------------------------------
 class Op:
     __slots__ = ()
 
+    def __repr__(self) -> str:
+        args = ", ".join(f"{s}={getattr(self, s)!r}" for s in self.__slots__)
+        return f"{self.__class__.__name__}({args})"
 
-@dataclass(frozen=True)
+
 class Read(Op):
-    fifo: "Fifo"
+    __slots__ = ("fifo",)
+
+    def __init__(self, fifo: "Fifo"):
+        self.fifo = fifo
 
 
-@dataclass(frozen=True)
 class Write(Op):
-    fifo: "Fifo"
-    value: Any
+    __slots__ = ("fifo", "value")
+
+    def __init__(self, fifo: "Fifo", value: Any):
+        self.fifo = fifo
+        self.value = value
 
 
-@dataclass(frozen=True)
 class ReadNB(Op):
-    fifo: "Fifo"
+    __slots__ = ("fifo",)
+
+    def __init__(self, fifo: "Fifo"):
+        self.fifo = fifo
 
 
-@dataclass(frozen=True)
 class WriteNB(Op):
-    fifo: "Fifo"
-    value: Any
+    __slots__ = ("fifo", "value")
+
+    def __init__(self, fifo: "Fifo", value: Any):
+        self.fifo = fifo
+        self.value = value
 
 
-@dataclass(frozen=True)
 class Empty(Op):
-    fifo: "Fifo"
-    used: bool = True   # False → dead probe, eliminated (paper Sec. 7.3.2)
+    __slots__ = ("fifo", "used")
+
+    def __init__(self, fifo: "Fifo", used: bool = True):
+        self.fifo = fifo
+        self.used = used    # False → dead probe, eliminated (paper Sec. 7.3.2)
 
 
-@dataclass(frozen=True)
 class Full(Op):
-    fifo: "Fifo"
-    used: bool = True
+    __slots__ = ("fifo", "used")
+
+    def __init__(self, fifo: "Fifo", used: bool = True):
+        self.fifo = fifo
+        self.used = used
 
 
-@dataclass(frozen=True)
 class Delay(Op):
-    cycles: int
+    __slots__ = ("cycles",)
+
+    def __init__(self, cycles: int):
+        self.cycles = cycles
 
 
-@dataclass(frozen=True)
 class Emit(Op):
-    key: str
-    value: Any
+    __slots__ = ("key", "value")
+
+    def __init__(self, key: str, value: Any):
+        self.key = key
+        self.value = value
 
 
 # --------------------------------------------------------------------------

@@ -68,7 +68,8 @@ def _module_graph_cyclic(endpoints: Dict[int, Tuple[Set[int], Set[int]]]) -> boo
     return any(dfs(u) for u in list(adj) if color.get(u, WHITE) == WHITE)
 
 
-def classify_dynamic(builder, n_variants: int = 4) -> Classification:
+def classify_dynamic(builder, n_variants: int = 4,
+                     cache=None) -> Classification:
     """Classification with *dynamic divergence validation*.
 
     The B-vs-C boundary is semantic ("does an NB outcome alter behavior?"),
@@ -82,13 +83,16 @@ def classify_dynamic(builder, n_variants: int = 4) -> Classification:
 
     ``builder`` is a zero-arg callable returning a fresh Program (generators
     are single-use).  All probe runs share one
-    :class:`~repro.core.trace.HybridCache`, so dynamic designs replay their
-    memoized module streams across the depth variants and only re-run
-    generators past genuine control-flow divergences (the witnesses this
-    probe is hunting for).
+    :class:`~repro.core.trace.HybridCache` (pass ``cache`` to supply your
+    own and inspect its hit/switch/divergence counters afterwards), so
+    dynamic designs replay their memoized module streams across the depth
+    variants — validated cached segments replay array-at-a-time, making the
+    probe runs near-free — and only re-run generators past genuine
+    control-flow divergences (the witnesses this probe is hunting for).
     """
     from .trace import HybridCache
-    cache = HybridCache()
+    if cache is None:
+        cache = HybridCache()
     base_prog = builder()
     base = simulate(base_prog, hybrid_cache=cache)
     c = classify(base_prog, base)

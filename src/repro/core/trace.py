@@ -56,6 +56,7 @@ from __future__ import annotations
 import heapq
 from collections import deque
 from dataclasses import dataclass, field
+from itertools import repeat
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -238,6 +239,9 @@ class RecordedTrace:
 # ---------------------------------------------------------------------------
 # Pass 1: record — generators entered at most once per module
 # ---------------------------------------------------------------------------
+_REC_QUANTUM = 256     # ops per activation before the recorder rotates
+
+
 def record_trace(program: Program, max_steps: int = 50_000_000) -> RecordedTrace:
     """Run every module generator once, untimed, and record its op stream.
 
@@ -248,6 +252,12 @@ def record_trace(program: Program, max_steps: int = 50_000_000) -> RecordedTrace
     NB access/probe, a parked module that never wakes (cyclic blocking
     wait — a true design deadlock), or a second reader racing a parked one
     raises :class:`TraceUnsupported`.
+
+    Each activation is bounded to ``_REC_QUANTUM`` ops before the scheduler
+    rotates (legal under KPN determinism — any schedule records the same
+    streams), so probing a *dynamic* design under ``trace="auto"`` aborts
+    to the hybrid path after O(modules x quantum) ops instead of first
+    recording some module's entire multi-thousand-op stream.
 
     Raises ``RuntimeError`` when ``max_steps`` generator resumptions are
     exceeded (possible livelock), matching the generator engine's budget.
@@ -293,12 +303,16 @@ def record_trace(program: Program, max_steps: int = 50_000_000) -> RecordedTrace
             gap = 1
         else:
             send = None
+        quantum = steps + _REC_QUANTUM
         while True:
             steps += 1
             if steps > max_steps:
                 raise RuntimeError(
                     f"step budget exceeded ({max_steps}); possible livelock "
                     f"— neither OmniSim nor co-sim detects livelock")
+            if steps > quantum and send is None and runq:
+                runq.append(mid)        # rotate: bounded activation quantum
+                break
             try:
                 op = gen_send(send)
             except StopIteration:
@@ -684,6 +698,58 @@ class TraceSimGraph:
         return indptr, srcs[order], wgts[order], base.astype(np.int64)
 
 
+class _LazyConstraints(list):
+    """Constraint records materialized on first access.
+
+    The same trick as :attr:`TraceSimGraph.nodes`: query-dominated runs
+    carry one :class:`~repro.core.events.Constraint` per query, but the
+    incremental/DSE consumers read the *compiled* constraint arrays of the
+    pre-built CompiledGraph — the object records exist for object-level
+    readers (tests, reporting) and are built on the first access.  Every
+    reader *and* mutator of the list API forces materialization first (see
+    the wrapper loop below), so a partially-initialized view can never
+    leak; being a list subclass, reflected comparisons against plain lists
+    dispatch here first, so those force too.
+    """
+
+    __slots__ = ("_thunk",)
+
+    def __init__(self, thunk):
+        super().__init__()
+        self._thunk = thunk
+
+    def _force(self) -> None:
+        thunk, self._thunk = self._thunk, None
+        if thunk is not None:
+            list.extend(self, thunk())
+
+    __hash__ = None
+
+
+def _lazy_forcing(name):
+    base = getattr(list, name)
+
+    def method(self, *args, **kwargs):
+        self._force()
+        for a in args:
+            if type(a) is _LazyConstraints:
+                a._force()
+        return base(self, *args, **kwargs)
+
+    method.__name__ = name
+    return method
+
+
+for _name in ("__len__", "__iter__", "__getitem__", "__eq__", "__ne__",
+              "__lt__", "__le__", "__gt__", "__ge__", "__contains__",
+              "__repr__", "__reversed__", "__add__", "__mul__", "__rmul__",
+              "__iadd__", "__imul__", "__setitem__", "__delitem__",
+              "count", "index", "copy", "append", "extend", "insert",
+              "remove", "pop", "sort", "reverse", "clear"):
+    setattr(_LazyConstraints, _name, _lazy_forcing(_name))
+del _name
+
+
 # ---------------------------------------------------------------------------
 # CompiledGraph bridge: incremental/DSE reuse without graph re-interpretation
 # ---------------------------------------------------------------------------
@@ -795,9 +861,7 @@ def simulate_traced(program: Program,
 #
 #   * **blocking segments** (the ops between two queries) are recorded as
 #     flat (kind, fifo, gap, seq) rows exactly like :func:`record_trace` and
-#     timed array-at-a-time by an incremental frontier solver — the same
-#     ``t = cw + cummax(c - cw)`` chain recurrence as :func:`_solve_times`,
-#     restricted to the maximal prefix whose RAW/WAR sources are committed;
+#     timed array-at-a-time;
 #   * **query points** drop to the generator protocol of ``core/engine.py``:
 #     the query's source cycle is the (now solved) chain time, the verdict
 #     comes from the committed per-FIFO time tables (paper Table 2), and an
@@ -805,6 +869,43 @@ def simulate_traced(program: Program,
 #     (paper Sec. 7.1) — sound here too, because every event that is still
 #     untimed at a stuck state transitively waits on some pending query and
 #     therefore commits strictly after the earliest priced query's cycle.
+#
+# Three solvers cooperate on the timing side:
+#
+#   * **Scalar/windowed frontier** (:meth:`HybridSim._advance_frontier`):
+#     advances one module's maximal ready prefix, row by row or in
+#     geometrically growing numpy windows.  It stops at the first row whose
+#     RAW/WAR source is not yet *timed*, so tightly-coupled pipelines make
+#     it ping-pong between modules in FIFO-depth-sized hops.
+#   * **Provisional-times batch solver** (:meth:`HybridSim._solve_batch`):
+#     when enough rows are pending, every module's pending window is solved
+#     *simultaneously* — chains are truncated at rows whose source event is
+#     not even recorded yet (the writer/reader is parked at a query), cross
+#     edges between the provisional windows are materialized, and the same
+#     per-chain ``t = cw + cummax(c - cw)`` Gauss-Seidel sweep as
+#     :func:`_solve_times` runs to fixpoint over the whole window.  The
+#     truncation is what validates the committed prefix: a row inside it
+#     depends only on committed times or on rows of the same window, so the
+#     fixpoint times are final.  Non-convergence (times growing past the
+#     acyclic bound — a WAR cycle, i.e. a genuine deadlock under these
+#     depths) commits nothing and defers to the scalar frontier, which
+#     stalls and lets ``run()`` raise :class:`TraceUnsupported` so the
+#     generator engine reports the paper-exact stall cycle.
+#   * **Query periodization** (:meth:`HybridSim._burst_polls`): a steady-
+#     state poll loop — the same query site failing with the same period and
+#     no commits in between, e.g. ``fig2_timer``'s done-polling timer —
+#     needs no per-query machinery at all.  Once the per-module detector
+#     (:meth:`HybridSim._apply_query`) sees ``_POLL_STREAK`` consecutive
+#     periodic failures, the K future outcomes that are *definitively*
+#     false against the committed tables (the target event's commit time is
+#     immutable, so ``(lim - t0) // p`` verdicts are known at once —
+#     Table 2 vectorized over the window) are resolved in one burst: rows,
+#     times and constraints are appended in bulk and the generator is
+#     resumed in a tight verification loop that falls back to per-query
+#     interpretation the moment a yield diverges from the recorded pattern
+#     (different site, different gap, or a non-timing op).  Undecidable
+#     outcomes never burst (``K = 0`` when the target event is uncommitted),
+#     so the earliest-query forced-false rule is preserved verbatim.
 #
 # The result is bit-identical to the generator engine (same graph, times,
 # FIFO tables, constraints and stats.{nodes,edges,queries}) because both
@@ -819,10 +920,15 @@ def simulate_traced(program: Program,
 # yield-level stream; later runs of the *same design shape* (e.g.
 # ``classify_dynamic``'s repeated builder calls under perturbed depths)
 # replay the cached stream without ever invoking the generator, validating
-# every read value and query outcome against live state.  On divergence the
-# engine first looks for another cached branch whose prefix re-converges
-# with the live outcome, and only then materializes the real generator,
-# fast-forwarding it with the already-delivered send values.
+# every read value and query outcome against live state.  Validated blocking
+# segments replay array-at-a-time (:class:`_RunArrays`,
+# :meth:`HybridSim._replay_cached_bulk`): the cached yield stream is
+# compiled once into flat row arrays and a window of rows is committed per
+# step after a single per-FIFO value check, instead of re-dispatching every
+# yield through Python.  On divergence the engine first looks for another
+# cached branch whose prefix re-converges with the live outcome, and only
+# then materializes the real generator, fast-forwarding it with the
+# already-delivered send values.
 
 # module states
 _H_READY, _H_PARK_READ, _H_PARK_QUERY, _H_DONE = 0, 1, 2, 3
@@ -845,6 +951,9 @@ _CLS_TO_QC = {ReadNB: _QC_READ_NB, WriteNB: _QC_WRITE_NB,
               Empty: _QC_EMPTY, Full: _QC_FULL}
 
 _VEC_MIN = 48          # pending-slice length above which the solver vectorizes
+_BATCH_MIN = 128       # total pending rows above which _solve_batch engages
+_POLL_STREAK = 3       # periodic failures before query periodization kicks in
+_CACHE_BULK_MIN = 4    # cached-row window length worth array dispatch
 
 
 class _GrowBuf:
@@ -884,11 +993,117 @@ class _CachedRun:
     ``i``.  Payloads: Read -> value read, Write -> value written,
     ReadNB -> (ok, value), WriteNB -> (ok, value), Empty/Full -> verdict
     bool (pre-negation), Delay -> cycles, Emit -> (key, value), dead probe
-    -> None.
+    -> None.  ``arr`` is the lazily-built :class:`_RunArrays` compilation of
+    the stream for array-at-a-time replay (identity-compared: two runs with
+    the same ylog are the same run regardless of compilation state).
     """
 
     ylog: list
     sends: list
+    arr: Any = field(default=None, repr=False, compare=False)
+
+
+class _RunArrays:
+    """A cached run's yield stream compiled to flat row arrays.
+
+    Built once per :class:`_CachedRun` (lazily, on first bulk replay) and
+    shared by every subsequent replay of that branch.  The stream is lowered
+    exactly like :func:`record_trace` lowers a live generator: committing
+    blocking accesses become *rows* (delays and dead probes fold into the
+    row's ``gap``, ``Emit``\\ s are kept aside with their positions), query
+    yields become *stop events* that bound the bulk-replayable windows.
+    Because each FIFO side belongs to a single module (SPSC), the per-FIFO
+    sequence numbers of a from-scratch replay are deterministic and are
+    precomputed in ``row_seq``.
+    """
+
+    __slots__ = ("ev_pos", "ev_rowidx", "next_q", "boundary",
+                 "row_code", "row_fifo", "row_gap", "row_seq", "row_pos",
+                 "row_probes_cum", "read_fifos", "write_fifos",
+                 "rrow_of", "rvals_of", "wrow_of", "wvals_of",
+                 "emit_pos", "emit_kv")
+
+    def __init__(self, ylog: list):
+        ev_pos: list = []
+        ev_rowidx: list = []
+        row_code: list = []
+        row_fifo: list = []
+        row_gap: list = []
+        row_seq: list = []
+        row_pos: list = []
+        row_probes: list = []
+        emit_pos: list = []
+        emit_kv: list = []
+        rrow_of: Dict[int, list] = {}
+        rvals_of: Dict[int, list] = {}
+        wrow_of: Dict[int, list] = {}
+        wvals_of: Dict[int, list] = {}
+        rcnt: Dict[int, int] = {}
+        wcnt: Dict[int, int] = {}
+        boundary = np.zeros(len(ylog) + 1, dtype=bool)
+        boundary[0] = True
+        gap, probes = 1, 0
+        for pos, (code, f, payload) in enumerate(ylog):
+            if code == OP_DELAY:
+                gap += payload
+            elif code == OP_EMIT:
+                emit_pos.append(pos)
+                emit_kv.append(payload)
+            elif code == OP_PROBE_DEAD:
+                gap += 1
+                probes += 1
+            elif code == OP_READ or code == OP_WRITE:
+                boundary[pos + 1] = True
+                ev_pos.append(pos)
+                ev_rowidx.append(len(row_code))
+                row_code.append(code)
+                row_fifo.append(f)
+                row_gap.append(gap)
+                row_pos.append(pos)
+                row_probes.append(probes)
+                if code == OP_READ:
+                    s = rcnt.get(f, 0) + 1
+                    rcnt[f] = s
+                    rrow_of.setdefault(f, []).append(len(row_code) - 1)
+                    rvals_of.setdefault(f, []).append(payload)
+                else:
+                    s = wcnt.get(f, 0) + 1
+                    wcnt[f] = s
+                    wrow_of.setdefault(f, []).append(len(row_code) - 1)
+                    wvals_of.setdefault(f, []).append(payload)
+                row_seq.append(s)
+                gap, probes = 1, 0
+            else:                     # query yield: bounds the bulk window
+                boundary[pos + 1] = True
+                ev_pos.append(pos)
+                ev_rowidx.append(-1)
+                gap, probes = 1, 0
+        self.ev_pos = np.asarray(ev_pos, dtype=np.int64)
+        self.ev_rowidx = np.asarray(ev_rowidx, dtype=np.int64)
+        # next query event at-or-after each event index (len(ev) = none)
+        nq = np.empty(len(ev_pos) + 1, dtype=np.int64)
+        nq[len(ev_pos)] = len(ev_pos)
+        for i in range(len(ev_pos) - 1, -1, -1):
+            nq[i] = i if ev_rowidx[i] < 0 else nq[i + 1]
+        self.next_q = nq
+        self.boundary = boundary
+        self.row_code = row_code
+        self.row_fifo = row_fifo
+        self.row_gap = row_gap
+        self.row_seq = row_seq
+        self.row_pos = np.asarray(row_pos, dtype=np.int64)
+        self.row_probes_cum = np.concatenate(
+            [[0], np.cumsum(np.asarray(row_probes, dtype=np.int64))])
+        self.read_fifos = sorted(rrow_of)
+        self.write_fifos = sorted(wrow_of)
+        self.rrow_of = {f: np.asarray(v, dtype=np.int64)
+                        for f, v in rrow_of.items()}
+        self.rvals_of = rvals_of
+        self.wrow_of = {f: np.asarray(v, dtype=np.int64)
+                        for f, v in wrow_of.items()}
+        self.wvals_of = wvals_of
+        self.emit_pos = np.asarray(emit_pos, dtype=np.int64)
+        self.emit_kv = emit_kv
 
 
 class HybridCache:
@@ -942,7 +1157,9 @@ class _HMod:
     __slots__ = ("mid", "name", "gen", "started", "state", "send",
                  "kind", "fifo", "gap", "seq", "times", "gap_acc", "end_gap",
                  "park_fid", "qid", "q_code", "q_fifo", "q_seq", "q_payload",
-                 "q_time", "cand", "cand_alts", "pos", "ylog", "sends")
+                 "q_time", "cand", "cand_alts", "pos", "ylog", "sends",
+                 "p_code", "p_fifo", "p_seq", "p_gap", "p_row", "streak",
+                 "burst", "pending_op")
 
     def __init__(self, mid: int, name: str):
         self.mid = mid
@@ -971,6 +1188,16 @@ class _HMod:
         self.pos = 0                  # next yield index (cache replay)
         self.ylog: Optional[list] = None
         self.sends: Optional[list] = None
+        # poll-loop detector (query periodization): last failed query's
+        # site/gap/row and the length of the current periodic failure streak
+        self.p_code = -1
+        self.p_fifo = -1
+        self.p_seq = -1
+        self.p_gap = -1
+        self.p_row = -2
+        self.streak = 0
+        self.burst = False            # detector armed a burst attempt
+        self.pending_op = None        # yield fetched but not yet dispatched
 
 
 class HybridSim:
@@ -984,10 +1211,13 @@ class HybridSim:
     """
 
     def __init__(self, program: Program, cache: Optional[HybridCache] = None,
-                 max_steps: int = 50_000_000):
+                 max_steps: int = 50_000_000, periodize: bool = True,
+                 batch_min: int = _BATCH_MIN):
         self.program = program
         self.cache = cache
         self.max_steps = max_steps
+        self.periodize = periodize
+        self.batch_min = batch_min    # <= 0 disables the batch solver
         self.depths = [f.depth for f in program.fifos]
         n_fifo = len(program.fifos)
         self.mods = [_HMod(m.mid, m.name) for m in program.modules]
@@ -1013,6 +1243,11 @@ class HybridSim:
         self.queries = 0
         self.forced = 0
         self.skipped_probes = 0
+        self.bulk_queries = 0         # queries resolved by periodized bursts
+        self.bursts = 0
+        self.batch_rows = 0           # rows committed by the batch solver
+        self.batch_solves = 0
+        self.cache_bulk_rows = 0      # cached rows replayed array-at-a-time
         if cache is not None:
             self.sig = HybridCache.signature(program)
             for st in self.mods:
@@ -1168,18 +1403,210 @@ class HybridSim:
                 return
             window *= 2
 
+    def _solve_batch(self) -> bool:
+        """Provisional-times batch solve of every recorded-but-untimed row.
+
+        Replaces the FIFO-depth-sized hops of :meth:`_advance_frontier` on
+        tightly-coupled pipelines: every module's pending window enters one
+        multi-chain longest-path system (committed times as boundary
+        conditions), solved by the same per-chain ``t = cw + cummax(c-cw)``
+        Gauss-Seidel sweep as :func:`_solve_times`.  Windows are first
+        *truncated* at the earliest row whose RAW/WAR source event is not
+        recorded anywhere (its module is parked at a query) — iterated to a
+        fixpoint, since truncating a writer window can strand a reader row —
+        which is what validates the committed prefix: every surviving row
+        depends only on committed times or rows inside the windows.
+
+        Returns True when any row was committed.  Non-convergence (a WAR
+        cycle: times grow past the acyclic bound) commits nothing and
+        returns False — the scalar frontier then stalls on the cycle and
+        ``run()`` reports it as a deadlock via :class:`TraceUnsupported`.
+        """
+        fw, fr = self.fw_times, self.fr_times
+        n_fifo = len(self.depths)
+        dep = np.asarray(self.depths, dtype=np.int64)
+        fwn = np.fromiter((b.n for b in fw), np.int64, n_fifo)
+        frn = np.fromiter((b.n for b in fr), np.int64, n_fifo)
+        sts, kinds, fifos, gaps, seqs, t0s = [], [], [], [], [], []
+        for st in self.mods:
+            lo, hi = len(st.times), len(st.kind)
+            if lo >= hi:
+                continue
+            sts.append(st)
+            kinds.append(np.asarray(st.kind[lo:], dtype=np.int64))
+            fifos.append(np.asarray(st.fifo[lo:], dtype=np.int64))
+            gaps.append(np.asarray(st.gap[lo:], dtype=np.int64))
+            seqs.append(np.asarray(st.seq[lo:], dtype=np.int64))
+            t0s.append(st.times[lo - 1] if lo else 0)
+        n_win = len(sts)
+        if not n_win:
+            return False
+        # ---- truncate windows at unrecorded sources (iterated fixpoint)
+        e = [len(k) for k in kinds]
+        wwin = np.full(n_fifo, -1, dtype=np.int64)   # window holding f's
+        rwin = np.full(n_fifo, -1, dtype=np.int64)   # pending writes/reads
+        wpos: Dict[int, np.ndarray] = {}
+        rpos: Dict[int, np.ndarray] = {}
+        for i in range(n_win):
+            wr = kinds[i] != OP_READ
+            for f in np.unique(fifos[i]):
+                m = fifos[i] == f
+                pw = np.flatnonzero(m & wr)
+                if len(pw):
+                    wwin[f] = i
+                    wpos[int(f)] = pw
+                pr = np.flatnonzero(m & ~wr)
+                if len(pr):
+                    rwin[f] = i
+                    rpos[int(f)] = pr
+        for _ in range(4 * n_win + 8):
+            avail_w = np.zeros(n_fifo, dtype=np.int64)
+            avail_r = np.zeros(n_fifo, dtype=np.int64)
+            for f, p in wpos.items():
+                avail_w[f] = int(np.searchsorted(p, e[int(wwin[f])]))
+            for f, p in rpos.items():
+                avail_r[f] = int(np.searchsorted(p, e[int(rwin[f])]))
+            changed = False
+            for i in range(n_win):
+                lim = e[i]
+                if not lim:
+                    continue
+                k, f, s = kinds[i][:lim], fifos[i][:lim], seqs[i][:lim]
+                rd = k == OP_READ
+                bad = rd & (s > fwn[f] + avail_w[f])
+                tg = s - dep[f]
+                bad |= ~rd & (tg > 0) & (tg > frn[f] + avail_r[f])
+                if bad.any():
+                    e[i] = int(np.argmax(bad))
+                    changed = True
+            if not changed:
+                break
+        else:
+            return False
+        if not any(e):
+            return False
+        # ---- build the provisional system: cw, constant sources, edges
+        cws, cs, ts = [], [], []
+        buckets: Dict[int, List[Tuple[int, np.ndarray, np.ndarray]]] = {}
+        total_gap = 0
+        n_edges = 0
+        max_committed = 0
+        for i in range(n_win):
+            lim = e[i]
+            k, f, s, g = (kinds[i][:lim], fifos[i][:lim], seqs[i][:lim],
+                          gaps[i][:lim])
+            cw = t0s[i] + np.cumsum(g)
+            c = np.full(lim, NEGI, dtype=np.int64)
+            total_gap += int(g.sum())
+            max_committed = max(max_committed, t0s[i])
+            rd = k == OP_READ
+            for fid in np.unique(f):
+                fid = int(fid)
+                m_r = rd & (f == fid)
+                if m_r.any():
+                    sv = s[m_r]
+                    com = sv <= fwn[fid]
+                    if com.any():
+                        idx = np.flatnonzero(m_r)[com]
+                        c[idx] = fw[fid].a[sv[com] - 1] + 1
+                    pend = ~com
+                    if pend.any():
+                        dst = np.flatnonzero(m_r)[pend]
+                        src = wpos[fid][sv[pend] - fwn[fid] - 1]
+                        buckets.setdefault(int(wwin[fid]), []).append(
+                            (i, src, dst))
+                        n_edges += len(dst)
+                m_w = ~rd & (f == fid)
+                if m_w.any():
+                    tg = s[m_w] - int(dep[fid])
+                    con = tg > 0
+                    com = con & (tg <= frn[fid])
+                    if com.any():
+                        idx = np.flatnonzero(m_w)[com]
+                        c[idx] = fr[fid].a[tg[com] - 1] + 1
+                    pend = con & ~com
+                    if pend.any():
+                        dst = np.flatnonzero(m_w)[pend]
+                        src = rpos[fid][tg[pend] - frn[fid] - 1]
+                        buckets.setdefault(int(rwin[fid]), []).append(
+                            (i, src, dst))
+                        n_edges += len(dst)
+            if lim:
+                # committed sources (incl. from fully-timed modules) push
+                # the acyclic bound past the pending modules' own times
+                max_committed = max(max_committed, int(c.max()))
+            cws.append(cw)
+            cs.append(c)
+            ts.append(np.full(lim, NEGI, dtype=np.int64))
+        # ---- Gauss-Seidel sweep to fixpoint (dirty-window tracking)
+        bound = max_committed + total_gap + n_edges + 1
+        dirty = [lim > 0 for lim in e]
+        sweeps = 0
+        while any(dirty):
+            sweeps += 1
+            if sweeps > n_win + 4:
+                if sweeps > sum(e) + 2 or max(
+                        (int(t.max()) for t in ts if len(t)),
+                        default=0) > bound:
+                    return False         # WAR cycle: defer to scalar/deadlock
+            for i in range(n_win):
+                if not dirty[i]:
+                    continue
+                dirty[i] = False
+                seg = np.maximum(cs[i] - cws[i], 0)
+                np.maximum.accumulate(seg, out=seg)
+                seg += cws[i]
+                if np.array_equal(seg, ts[i]):
+                    continue
+                ts[i] = seg
+                for (di, src, dst) in buckets.get(i, ()):
+                    cand = seg[src] + 1
+                    old = cs[di][dst]
+                    moved = cand > old
+                    if moved.any():
+                        cs[di][dst] = np.maximum(old, cand)
+                        dirty[di] = True
+        # ---- commit: everything in the truncated windows is final
+        for i in range(n_win):
+            lim = e[i]
+            if not lim:
+                continue
+            st, t = sts[i], ts[i]
+            st.times.extend(t.tolist())
+            k, f = kinds[i][:lim], fifos[i][:lim]
+            rd = k == OP_READ
+            for fid in np.unique(f):
+                fid = int(fid)
+                m_r = rd & (f == fid)
+                if m_r.any():
+                    fr[fid].extend(t[m_r])
+                m_w = ~rd & (f == fid)
+                if m_w.any():
+                    fw[fid].extend(t[m_w])
+            self.batch_rows += lim
+        self.batch_solves += 1
+        return True
+
     def _solve(self) -> bool:
-        """Run the frontier solver to fixpoint over the dirty-module set.
+        """Run the frontier solvers to fixpoint over the dirty-module set.
 
         Seeds the worklist with every module that has pending (recorded but
         untimed) rows — a handful of length checks, cheaper than per-op
-        dirty marking in the recorder hot loop.
+        dirty marking in the recorder hot loop.  Large pending volumes go
+        through the provisional-times batch solver first
+        (:meth:`_solve_batch`); the scalar frontier mops up the remainder
+        and is the sole path when the batch solver bails (WAR cycles).
         """
         dirty = self.solve_dirty
+        pending = 0
         for st in self.mods:
-            if len(st.times) < len(st.kind):
+            d = len(st.kind) - len(st.times)
+            if d > 0:
+                pending += d
                 dirty.add(st.mid)
         changed = False
+        if pending >= self.batch_min > 0 and self._solve_batch():
+            changed = True
         while dirty:
             st = self.mods[dirty.pop()]
             if self._advance_frontier(st):
@@ -1245,9 +1672,25 @@ class HybridSim:
         st.gap.append(st.gap_acc)
         st.seq.append(s)
         st.times.append(t)
+        g = st.gap_acc
         st.gap_acc = 1
         st.q_payload = None
         st.state = _H_READY
+        # ---- steady-state poll-loop detector (query periodization): a
+        # streak of >= _POLL_STREAK consecutive failures at the same site,
+        # with the same gap and no commits in between, arms a burst attempt
+        if outcome:
+            st.streak = 0
+        else:
+            if (row == st.p_row + 1 and code == st.p_code
+                    and f == st.p_fifo and s == st.p_seq and g == st.p_gap):
+                st.streak += 1
+                if st.streak >= _POLL_STREAK and self.periodize:
+                    st.burst = True
+            else:
+                st.p_code, st.p_fifo, st.p_seq, st.p_gap = code, f, s, g
+                st.streak = 1
+            st.p_row = row
         op_code = (OP_READ_NB, OP_WRITE_NB, OP_EMPTY, OP_FULL)[code]
         if st.cand is not None:
             want = (st.cand.ylog[st.pos][2]
@@ -1259,6 +1702,228 @@ class HybridSim:
         elif st.ylog is not None:
             st.ylog.append((op_code, f, expected))
             st.sends.append(st.send)
+
+    # ------------------------------------------------- query periodization
+    def _poll_horizon(self, st: _HMod) -> int:
+        """Number of future polls of ``st``'s detected loop that resolve
+        *definitively false* against the committed time tables.
+
+        Paper Table 2, vectorized over the periodic window: the k-th future
+        poll prices at ``t0 + k*p`` and fails while that cycle is <= the
+        (immutable) commit time of the target event, so the whole window of
+        verdicts is ``(lim - t0) // p`` — known at once, with no per-query
+        resolution.  Returns 0 when the target event is uncommitted (the
+        verdict would be undecidable: the forced-false rule must keep
+        handling it) or when the loop could succeed immediately.
+        """
+        code, f, s = st.q_code, st.q_fifo, st.q_seq
+        p = st.p_gap
+        if p <= 0:
+            return 0
+        if _QC_IS_READ_SIDE[code]:
+            wt = self.fw_times[f]
+            if s > wt.n:
+                return 0
+            lim = int(wt.a[s - 1])
+        else:
+            tg = s - self.depths[f]
+            if tg <= 0:
+                return 0
+            rt = self.fr_times[f]
+            if tg > rt.n:
+                return 0
+            lim = int(rt.a[tg - 1])
+        return (lim - st.times[-1]) // p
+
+    def _burst_polls(self, st: _HMod, K: int) -> bool:
+        """Resolve up to ``K`` periodic poll outcomes in one burst.
+
+        The module has just had a failed query resolved at its detected
+        poll site; all of the next ``K`` polls are known to fail
+        (:meth:`_poll_horizon`).  Rows, times and constraints are appended
+        in bulk while the module's stream (generator or cached branch) is
+        advanced through a tight verification loop that admits only the
+        recorded pattern — timing-only body ops followed by the same query
+        at the same gap.  Any divergence stops the burst *before* the
+        off-pattern poll is committed and hands the pending yield back to
+        the normal per-query dispatch, so results stay bit-identical.
+        Returns True when the module terminated during the burst.
+        """
+        code, f, s = st.q_code, st.q_fifo, st.q_seq
+        p = st.p_gap
+        op_code = (OP_READ_NB, OP_WRITE_NB, OP_EMPTY, OP_FULL)[code]
+        # failed NB accesses commit as NB_FAIL rows, probes as PROBE rows —
+        # exactly what _apply_query records (op_code is the *ylog* encoding)
+        row_code = OP_NB_FAIL if code <= _QC_WRITE_NB else OP_PROBE
+        if code == _QC_READ_NB:
+            fail_send: Any = (False, None)
+        elif code == _QC_WRITE_NB:
+            fail_send = False
+        else:
+            fail_send = True              # Empty/Full: send = not outcome
+        kind_l, fifo_l, gap_l = st.kind, st.fifo, st.gap
+        seq_l, times_l = st.seq, st.times
+        cons = self.constraints
+        mid = st.mid
+        t = times_l[-1]
+        k = 0
+        if st.cand is not None:
+            # cached-branch burst: verify entries, never touch a generator;
+            # rows/times/constraints are flushed in bulk after the loop
+            ylog = st.cand.ylog
+            L = len(ylog)
+            pos = st.pos
+            probes_total = 0
+            while k < K:
+                g_extra, probes, npos = 0, 0, pos
+                while npos < L:
+                    e = ylog[npos]
+                    c0 = e[0]
+                    if c0 == OP_DELAY:
+                        g_extra += e[2]
+                    elif c0 == OP_PROBE_DEAD:
+                        g_extra += 1
+                        probes += 1
+                    else:
+                        break
+                    npos += 1
+                if npos >= L:
+                    break
+                e = ylog[npos]
+                if e[0] != op_code or e[1] != f:
+                    break
+                pay = e[2]
+                if code == _QC_READ_NB:
+                    if pay != (False, None):
+                        break
+                elif code == _QC_WRITE_NB:
+                    if not (type(pay) is tuple and pay[0] is False):
+                        break
+                elif pay is not False:
+                    break
+                if st.gap_acc + g_extra != p:
+                    break
+                st.gap_acc = 1
+                probes_total += probes
+                pos = npos + 1
+                k += 1
+            if k:
+                row0 = len(kind_l)
+                self.queries += k
+                self.skipped_probes += probes_total
+                self.steps += pos - st.pos
+                cons.extend(zip(repeat(code, k), repeat(f, k), repeat(s, k),
+                                repeat(mid, k), range(row0, row0 + k),
+                                repeat(False, k)))
+                kind_l.extend([row_code] * k)
+                fifo_l.extend([f] * k)
+                gap_l.extend([p] * k)
+                seq_l.extend([s] * k)
+                times_l.extend(range(t + p, t + k * p + 1, p))
+            st.pos = pos
+            st.send = fail_send
+        else:
+            # live-generator burst: rows/times/constraints are flushed in
+            # bulk after the verification loop — the loop itself is only
+            # generator resumptions plus pattern checks
+            gen = st.gen
+            gen_send = gen.send
+            log = st.ylog is not None
+            send = st.send
+            qcls = (ReadNB, WriteNB, Empty, Full)[code]
+            stopped = False
+            n_send = 0
+            budget = self.max_steps - self.steps
+            try:
+                while k < K:
+                    op = gen_send(send)
+                    n_send += 1
+                    if n_send > budget:
+                        raise RuntimeError(
+                            f"step budget exceeded ({self.max_steps}); "
+                            f"possible livelock — neither OmniSim nor "
+                            f"co-sim detects livelock")
+                    send = None
+                    cls = op.__class__
+                    while True:        # timing-only body ops keep the pattern
+                        if cls is Delay:
+                            st.gap_acc += op.cycles
+                            if log:
+                                st.ylog.append((OP_DELAY, -1, op.cycles))
+                                st.sends.append(None)
+                        elif cls is Emit:
+                            self.outputs[op.key] = op.value
+                            if log:
+                                st.ylog.append((OP_EMIT, -1,
+                                                (op.key, op.value)))
+                                st.sends.append(None)
+                        elif (cls is Empty or cls is Full) and not op.used:
+                            self.skipped_probes += 1
+                            st.gap_acc += 1
+                            if log:
+                                st.ylog.append((OP_PROBE_DEAD, op.fifo.fid,
+                                                None))
+                                st.sends.append(None)
+                        else:
+                            break
+                        op = gen_send(None)
+                        n_send += 1
+                        if n_send > budget:
+                            raise RuntimeError(
+                                f"step budget exceeded ({self.max_steps}); "
+                                f"possible livelock — neither OmniSim nor "
+                                f"co-sim detects livelock")
+                        cls = op.__class__
+                    if (cls is not qcls or op.fifo.fid != f
+                            or st.gap_acc != p):
+                        st.pending_op = op
+                        break
+                    st.gap_acc = 1
+                    if log:
+                        if code == _QC_READ_NB:
+                            st.ylog.append((op_code, f, (False, None)))
+                        elif code == _QC_WRITE_NB:
+                            st.ylog.append((op_code, f, (False, op.value)))
+                        else:
+                            st.ylog.append((op_code, f, False))
+                        st.sends.append(fail_send)
+                    send = fail_send
+                    k += 1
+                else:
+                    st.send = fail_send
+                if st.pending_op is not None:
+                    st.send = None
+            except StopIteration:
+                st.state = _H_DONE
+                st.end_gap = st.gap_acc
+                stopped = True
+            self.steps += n_send
+            if k:
+                row0 = len(kind_l)
+                self.queries += k
+                cons.extend(zip(repeat(code, k), repeat(f, k), repeat(s, k),
+                                repeat(mid, k), range(row0, row0 + k),
+                                repeat(False, k)))
+                kind_l.extend([row_code] * k)
+                fifo_l.extend([f] * k)
+                gap_l.extend([p] * k)
+                seq_l.extend([s] * k)
+                times_l.extend(range(t + p, t + k * p + 1, p))
+            if stopped:
+                if k:
+                    self.bursts += 1
+                    self.bulk_queries += k
+                    st.p_row = len(kind_l) - 1
+                return True
+        if k:
+            self.bursts += 1
+            self.bulk_queries += k
+            st.p_row = len(kind_l) - 1
+        if self.steps > self.max_steps:
+            raise RuntimeError(
+                f"step budget exceeded ({self.max_steps}); possible "
+                f"livelock — neither OmniSim nor co-sim detects livelock")
+        return False
 
     def _force_earliest(self) -> None:
         """Earliest-query forced-false rule (paper Sec. 7.1).
@@ -1372,14 +2037,112 @@ class HybridSim:
         st.gen = gen
         st.started = True
 
-    # ------------------------------------------------------------- recording
-    def _record_access(self, st: _HMod, code: int, f: int, s: int) -> None:
-        st.kind.append(code)
-        st.fifo.append(f)
-        st.gap.append(st.gap_acc)
-        st.seq.append(s)
-        st.gap_acc = 1
+    def _replay_cached_bulk(self, st: _HMod) -> bool:
+        """Replay a window of validated cached rows array-at-a-time.
 
+        Instead of re-dispatching every cached yield through Python, the
+        candidate branch's compiled :class:`_RunArrays` view identifies the
+        run of committing blocking rows ahead of ``st.pos`` (bounded by the
+        next query), validates the whole window with one per-FIFO check —
+        expected read values against the current buffer contents, sequence
+        alignment against the live counters — and commits rows, buffers,
+        emits and probe counts in bulk.  Windows stop conservatively at the
+        first read not satisfiable from the *current* buffers (a later
+        per-yield step parks or diverges there, exactly as before), so the
+        fast path changes only the dispatch granularity, never an outcome.
+        """
+        cand = st.cand
+        arr = cand.arr
+        if arr is None:
+            arr = cand.arr = _RunArrays(cand.ylog)
+        pos = st.pos
+        if not arr.boundary[pos]:
+            return False
+        ev_pos = arr.ev_pos
+        e0 = int(np.searchsorted(ev_pos, pos))
+        if e0 >= len(ev_pos) or arr.ev_rowidx[e0] < 0:
+            return False
+        r0 = int(arr.ev_rowidx[e0])
+        r1 = r0 + int(arr.next_q[e0]) - e0
+        if r1 - r0 < _CACHE_BULK_MIN:
+            return False
+        # cap the window at the first read not satisfiable (count or value)
+        # from the current buffer contents; verify replay seq alignment
+        r_stop = r1
+        for f in arr.read_fifos:
+            rr = arr.rrow_of[f]
+            o0 = int(np.searchsorted(rr, r0))
+            o1 = int(np.searchsorted(rr, r_stop))
+            if o1 == o0:
+                continue
+            if self.rseq[f] != o0:       # misaligned: per-yield path decides
+                return False
+            vals = arr.rvals_of[f]
+            k, need = 0, o1 - o0
+            for v in self.buffers[f]:
+                if vals[o0 + k] != v:
+                    break
+                k += 1
+                if k == need:
+                    break
+            if k < need:
+                r_stop = int(rr[o0 + k])
+        if r_stop <= r0:
+            return False
+        for f in arr.write_fifos:
+            wr = arr.wrow_of[f]
+            o0 = int(np.searchsorted(wr, r0))
+            if int(np.searchsorted(wr, r_stop)) > o0 and self.wseq[f] != o0:
+                return False
+        # ---- commit the validated window
+        gap0 = st.gap_acc
+        st.kind.extend(arr.row_code[r0:r_stop])
+        st.fifo.extend(arr.row_fifo[r0:r_stop])
+        gaps = arr.row_gap[r0:r_stop]
+        if gap0 != 1:
+            gaps = [gap0 + gaps[0] - 1] + gaps[1:]
+        st.gap.extend(gaps)
+        st.seq.extend(arr.row_seq[r0:r_stop])
+        mid = st.mid
+        for f in arr.read_fifos:
+            rr = arr.rrow_of[f]
+            o0 = int(np.searchsorted(rr, r0))
+            o1 = int(np.searchsorted(rr, r_stop))
+            if o1 == o0:
+                continue
+            self._check_endpoint(f, mid, False)
+            buf = self.buffers[f]
+            for _ in range(o1 - o0):
+                buf.popleft()
+            self.rseq[f] = o1
+        for f in arr.write_fifos:
+            wr = arr.wrow_of[f]
+            o0 = int(np.searchsorted(wr, r0))
+            o1 = int(np.searchsorted(wr, r_stop))
+            if o1 == o0:
+                continue
+            self._check_endpoint(f, mid, True)
+            self.buffers[f].extend(arr.wvals_of[f][o0:o1])
+            self.wseq[f] = o1
+            w = self.waiting_reader.pop(f, None)
+            if w is not None:
+                self._enqueue(w)
+        p_end = int(arr.row_pos[r_stop - 1]) + 1
+        if len(arr.emit_pos):
+            a = int(np.searchsorted(arr.emit_pos, pos))
+            b = int(np.searchsorted(arr.emit_pos, p_end))
+            for i in range(a, b):
+                kv = arr.emit_kv[i]
+                self.outputs[kv[0]] = kv[1]
+        self.skipped_probes += int(arr.row_probes_cum[r_stop]
+                                   - arr.row_probes_cum[r0])
+        self.steps += p_end - pos
+        self.cache_bulk_rows += r_stop - r0
+        st.pos = p_end
+        st.gap_acc = 1
+        return True
+
+    # ------------------------------------------------------------- recording
     def _issue_query(self, st: _HMod, code: int, f: int, payload) -> bool:
         """Handle a query op; True if resolved inline (task may continue)."""
         self.queries += 1
@@ -1410,15 +2173,23 @@ class HybridSim:
     def _advance(self, mid: int) -> None:
         """Drive one module until it parks, finishes, or the run queue must
         rotate — the hybrid recorder's hot loop (cheap list appends instead
-        of the generator engine's per-op graph-object churn)."""
+        of the generator engine's per-op graph-object churn; endpoint checks
+        and row recording are inlined, the step budget lives in a local that
+        is flushed around the bulk helpers)."""
         st = self.mods[mid]
         state = st.state
         if state == _H_DONE or state == _H_PARK_QUERY:
             return
         self.activations += 1
+        buffers = self.buffers
+        rseq, wseq = self.rseq, self.wseq
+        waiting_reader = self.waiting_reader
+        reader_of, writer_of = self.reader_of, self.writer_of
+        kapp, fapp = st.kind.append, st.fifo.append
+        gapp, sapp = st.gap.append, st.seq.append
         if state == _H_PARK_READ:
             f = st.park_fid
-            buf = self.buffers[f]
+            buf = buffers[f]
             if not buf:
                 raise self._unsup(
                     f"fifo {f} drained by another reader while "
@@ -1433,158 +2204,216 @@ class HybridSim:
             elif st.ylog is not None:
                 st.ylog[-1] = (OP_READ, f, v)     # patch the parked entry
                 st.sends.append(v)
-            s = self.rseq[f] = self.rseq[f] + 1
-            self._record_access(st, OP_READ, f, s)
+            s = rseq[f] = rseq[f] + 1
+            kapp(OP_READ)
+            fapp(f)
+            gapp(st.gap_acc)
+            sapp(s)
+            st.gap_acc = 1
             st.send = v
             st.park_fid = -1
             st.state = _H_READY
-        while True:
-            # ---- fetch the next yielded op (cached stream or generator)
-            self.steps += 1
-            if self.steps > self.max_steps:
-                raise RuntimeError(
-                    f"step budget exceeded ({self.max_steps}); possible "
-                    f"livelock — neither OmniSim nor co-sim detects livelock")
-            cand = st.cand
-            if cand is not None:
-                if st.pos >= len(cand.ylog):
-                    st.state = _H_DONE
-                    st.end_gap = st.gap_acc
-                    if self.cache is not None:
-                        self.cache.hits += 1
-                        self.cache.promote(self.sig, mid, cand)
-                    return
-                code, f, payload = cand.ylog[st.pos]
-                # dispatch on the cached opcode
-                if code == OP_READ:
-                    self._check_endpoint(f, mid, False)
-                    buf = self.buffers[f]
-                    if not buf:
-                        prev = self.waiting_reader.get(f)
-                        if prev is not None and prev != mid:
+        steps = self.steps
+        max_steps = self.max_steps
+        try:
+            while True:
+                # ---- periodized poll loop: burst-resolve K outcomes at once
+                if st.burst:
+                    st.burst = False
+                    self.steps = steps
+                    K = self._poll_horizon(st)
+                    if K > 0 and self._burst_polls(st, K):
+                        return
+                    steps = self.steps
+                # ---- fetch the next yielded op (cached stream or generator)
+                steps += 1
+                if steps > max_steps:
+                    raise RuntimeError(
+                        f"step budget exceeded ({max_steps}); possible "
+                        f"livelock — neither OmniSim nor co-sim detects "
+                        f"livelock")
+                cand = st.cand
+                if cand is not None:
+                    if st.pos >= len(cand.ylog):
+                        st.state = _H_DONE
+                        st.end_gap = st.gap_acc
+                        if self.cache is not None:
+                            self.cache.hits += 1
+                            self.cache.promote(self.sig, mid, cand)
+                        return
+                    self.steps = steps
+                    if self._replay_cached_bulk(st):
+                        steps = self.steps
+                        continue
+                    code, f, payload = cand.ylog[st.pos]
+                    # dispatch on the cached opcode
+                    if code == OP_READ:
+                        if reader_of.setdefault(f, mid) != mid:
                             raise self._unsup(
-                                f"two modules read fifo {f} — SPSC "
+                                f"fifo {f} has two reader modules — SPSC "
                                 f"violation; deferring to the generator "
                                 f"engine's endpoint check")
-                        self.waiting_reader[f] = mid
-                        st.park_fid = f
-                        st.state = _H_PARK_READ
-                        return
-                    v = buf.popleft()
-                    if payload != v:
-                        self._diverge(st, (OP_READ, f, v), v)
-                        s = self.rseq[f] = self.rseq[f] + 1
-                        self._record_access(st, OP_READ, f, s)
+                        buf = buffers[f]
+                        if not buf:
+                            prev = waiting_reader.get(f)
+                            if prev is not None and prev != mid:
+                                raise self._unsup(
+                                    f"two modules read fifo {f} — SPSC "
+                                    f"violation; deferring to the generator "
+                                    f"engine's endpoint check")
+                            waiting_reader[f] = mid
+                            st.park_fid = f
+                            st.state = _H_PARK_READ
+                            return
+                        v = buf.popleft()
+                        if payload != v:
+                            self._diverge(st, (OP_READ, f, v), v)
+                        else:
+                            st.pos += 1
+                        s = rseq[f] = rseq[f] + 1
+                        kapp(OP_READ)
+                        fapp(f)
+                        gapp(st.gap_acc)
+                        sapp(s)
+                        st.gap_acc = 1
                         st.send = v
-                        continue
-                    st.pos += 1
-                    s = self.rseq[f] = self.rseq[f] + 1
-                    self._record_access(st, OP_READ, f, s)
-                    st.send = v
-                elif code == OP_WRITE:
-                    self._check_endpoint(f, mid, True)
-                    st.pos += 1
-                    s = self.wseq[f] = self.wseq[f] + 1
-                    self._record_access(st, OP_WRITE, f, s)
-                    self.buffers[f].append(payload)
-                    w = self.waiting_reader.pop(f, None)
-                    if w is not None:
-                        self._enqueue(w)
-                    st.send = None
-                elif code == OP_DELAY:
-                    st.pos += 1
-                    st.gap_acc += payload
-                    st.send = None
-                elif code == OP_EMIT:
-                    st.pos += 1
-                    self.outputs[payload[0]] = payload[1]
-                    st.send = None
-                elif code == OP_PROBE_DEAD:
-                    st.pos += 1
-                    self.skipped_probes += 1
-                    st.gap_acc += 1
-                    st.send = None
-                else:       # query op: OP_READ_NB / OP_WRITE_NB / OP_EMPTY/FULL
-                    qc = _OP_TO_QC[code]
-                    qpayload = payload[1] if code == OP_WRITE_NB else None
-                    if not self._issue_query(st, qc, f, qpayload):
-                        return
-                continue
-            # ---- live generator path
-            gen = st.gen
-            if gen is None:
-                gen = st.gen = self.program.modules[mid].fn()
-            log = st.ylog is not None
-            try:
-                if not st.started:
-                    st.started = True
-                    op = next(gen)
+                    elif code == OP_WRITE:
+                        if writer_of.setdefault(f, mid) != mid:
+                            raise self._unsup(
+                                f"fifo {f} has two writer modules — SPSC "
+                                f"violation; deferring to the generator "
+                                f"engine's endpoint check")
+                        st.pos += 1
+                        s = wseq[f] = wseq[f] + 1
+                        kapp(OP_WRITE)
+                        fapp(f)
+                        gapp(st.gap_acc)
+                        sapp(s)
+                        st.gap_acc = 1
+                        buffers[f].append(payload)
+                        if waiting_reader:
+                            w = waiting_reader.pop(f, None)
+                            if w is not None:
+                                self._enqueue(w)
+                        st.send = None
+                    elif code == OP_DELAY:
+                        st.pos += 1
+                        st.gap_acc += payload
+                        st.send = None
+                    elif code == OP_EMIT:
+                        st.pos += 1
+                        self.outputs[payload[0]] = payload[1]
+                        st.send = None
+                    elif code == OP_PROBE_DEAD:
+                        st.pos += 1
+                        self.skipped_probes += 1
+                        st.gap_acc += 1
+                        st.send = None
+                    else:   # query op: OP_READ_NB / OP_WRITE_NB / OP_EMPTY/FULL
+                        qc = _OP_TO_QC[code]
+                        qpayload = payload[1] if code == OP_WRITE_NB else None
+                        if not self._issue_query(st, qc, f, qpayload):
+                            return
+                    continue
+                # ---- live generator path
+                log = st.ylog is not None
+                op = st.pending_op
+                if op is not None:      # yield left over from a burst break
+                    st.pending_op = None
                 else:
-                    op = gen.send(st.send)
-            except StopIteration:
-                st.state = _H_DONE
-                st.end_gap = st.gap_acc
-                return
-            st.send = None
-            cls = op.__class__
-            if cls is Read:
-                f = op.fifo.fid
-                self._check_endpoint(f, mid, False)
-                buf = self.buffers[f]
-                if not buf:
-                    prev = self.waiting_reader.get(f)
-                    if prev is not None and prev != mid:
+                    gen = st.gen
+                    if gen is None:
+                        gen = st.gen = self.program.modules[mid].fn()
+                    try:
+                        if not st.started:
+                            st.started = True
+                            op = next(gen)
+                        else:
+                            op = gen.send(st.send)
+                    except StopIteration:
+                        st.state = _H_DONE
+                        st.end_gap = st.gap_acc
+                        return
+                st.send = None
+                cls = op.__class__
+                if cls is Read:
+                    f = op.fifo.fid
+                    if reader_of.setdefault(f, mid) != mid:
                         raise self._unsup(
-                            f"two modules read fifo '{op.fifo.name}' — SPSC "
+                            f"fifo {f} has two reader modules — SPSC "
                             f"violation; deferring to the generator engine's "
                             f"endpoint check")
-                    self.waiting_reader[f] = mid
-                    st.park_fid = f
-                    st.state = _H_PARK_READ
+                    buf = buffers[f]
+                    if not buf:
+                        prev = waiting_reader.get(f)
+                        if prev is not None and prev != mid:
+                            raise self._unsup(
+                                f"two modules read fifo '{op.fifo.name}' — "
+                                f"SPSC violation; deferring to the generator "
+                                f"engine's endpoint check")
+                        waiting_reader[f] = mid
+                        st.park_fid = f
+                        st.state = _H_PARK_READ
+                        if log:
+                            self._log(st, OP_READ, f, None)  # patched on wake
+                        return
+                    v = buf.popleft()
+                    s = rseq[f] = rseq[f] + 1
+                    kapp(OP_READ)
+                    fapp(f)
+                    gapp(st.gap_acc)
+                    sapp(s)
+                    st.gap_acc = 1
+                    st.send = v
                     if log:
-                        self._log(st, OP_READ, f, None)  # patched on wake
-                    return
-                v = buf.popleft()
-                s = self.rseq[f] = self.rseq[f] + 1
-                self._record_access(st, OP_READ, f, s)
-                st.send = v
-                if log:
-                    self._log(st, OP_READ, f, v)
-                    st.sends.append(v)
-            elif cls is Write:
-                f = op.fifo.fid
-                self._check_endpoint(f, mid, True)
-                s = self.wseq[f] = self.wseq[f] + 1
-                self._record_access(st, OP_WRITE, f, s)
-                self.buffers[f].append(op.value)
-                w = self.waiting_reader.pop(f, None)
-                if w is not None:
-                    self._enqueue(w)
-                if log:
-                    self._log(st, OP_WRITE, f, op.value)
-                    st.sends.append(None)
-            elif cls is Delay:
-                st.gap_acc += op.cycles
-                if log:
-                    self._log(st, OP_DELAY, -1, op.cycles)
-                    st.sends.append(None)
-            elif cls is Emit:
-                self.outputs[op.key] = op.value
-                if log:
-                    self._log(st, OP_EMIT, -1, (op.key, op.value))
-                    st.sends.append(None)
-            elif (cls is Empty or cls is Full) and not op.used:
-                self.skipped_probes += 1
-                st.gap_acc += 1
-                if log:
-                    self._log(st, OP_PROBE_DEAD, op.fifo.fid, None)
-                    st.sends.append(None)
-            elif cls in (ReadNB, WriteNB, Empty, Full):
-                if not self._issue_query(st, _CLS_TO_QC[cls], op.fifo.fid,
-                                         getattr(op, "value", None)):
-                    return
-            else:
-                raise TypeError(f"unknown op {op!r}")
+                        self._log(st, OP_READ, f, v)
+                        st.sends.append(v)
+                elif cls is Write:
+                    f = op.fifo.fid
+                    if writer_of.setdefault(f, mid) != mid:
+                        raise self._unsup(
+                            f"fifo {f} has two writer modules — SPSC "
+                            f"violation; deferring to the generator engine's "
+                            f"endpoint check")
+                    s = wseq[f] = wseq[f] + 1
+                    kapp(OP_WRITE)
+                    fapp(f)
+                    gapp(st.gap_acc)
+                    sapp(s)
+                    st.gap_acc = 1
+                    buffers[f].append(op.value)
+                    if waiting_reader:
+                        w = waiting_reader.pop(f, None)
+                        if w is not None:
+                            self._enqueue(w)
+                    if log:
+                        self._log(st, OP_WRITE, f, op.value)
+                        st.sends.append(None)
+                elif cls is Delay:
+                    st.gap_acc += op.cycles
+                    if log:
+                        self._log(st, OP_DELAY, -1, op.cycles)
+                        st.sends.append(None)
+                elif cls is Emit:
+                    self.outputs[op.key] = op.value
+                    if log:
+                        self._log(st, OP_EMIT, -1, (op.key, op.value))
+                        st.sends.append(None)
+                elif (cls is Empty or cls is Full) and not op.used:
+                    self.skipped_probes += 1
+                    st.gap_acc += 1
+                    if log:
+                        self._log(st, OP_PROBE_DEAD, op.fifo.fid, None)
+                        st.sends.append(None)
+                elif cls in (ReadNB, WriteNB, Empty, Full):
+                    if not self._issue_query(st, _CLS_TO_QC[cls],
+                                             op.fifo.fid,
+                                             getattr(op, "value", None)):
+                        return
+                else:
+                    raise TypeError(f"unknown op {op!r}")
+        finally:
+            self.steps = steps
 
     # ------------------------------------------------------------------- run
     def run(self) -> SimResult:
@@ -1740,18 +2569,29 @@ class HybridSim:
             tbl.values.extend(self.buffers[fobj.fid])
         engine._writer_of = dict(self.writer_of)
         engine._reader_of = dict(self.reader_of)
-        # materialize the recorded constraints (engine-identical records)
-        offs = [lo for (lo, _) in slices]
-        constraints = [
-            Constraint(_QC_TO_RTYPE[code], f, s, offs[mid] + 1 + row, outcome)
-            for (code, f, s, mid, row, outcome) in self.constraints
-        ]
+        # materialize the recorded constraints (engine-identical records):
+        # one 2D array carries all columns, so the per-query Python work is a
+        # single C-level map/zip instead of five listcomps
+        n_cons = len(self.constraints)
+        cons_cols = (np.asarray(self.constraints, dtype=np.int64).reshape(
+            n_cons, 6) if n_cons else np.zeros((0, 6), np.int64))
+        offs_arr = np.asarray([lo for (lo, _) in slices] or [0], np.int64)
+        src_col = offs_arr[cons_cols[:, 3]] + 1 + cons_cols[:, 4]
+
+        def _materialize(cons_cols=cons_cols, src_col=src_col):
+            return map(Constraint._make, zip(
+                map(_QC_TO_RTYPE.__getitem__, cons_cols[:, 0].tolist()),
+                cons_cols[:, 1].tolist(), cons_cols[:, 2].tolist(),
+                src_col.tolist(), (cons_cols[:, 5] != 0).tolist()))
+
+        constraints = _LazyConstraints(_materialize)
         engine.constraints = constraints
         stats = engine.stats
         stats.nodes = n - n_mod
         stats.edges = engine.graph.n_edges
         stats.queries = self.queries
         stats.queries_forced_false = self.forced
+        stats.queries_periodized = self.bulk_queries
         stats.quiescence_rounds = self.phases
         stats.resumes = self.activations
         stats.skipped_probes = self.skipped_probes
@@ -1761,9 +2601,8 @@ class HybridSim:
         fifos_cg = [(w.copy(), r.copy(), blk.copy())
                     for w, r, blk in zip(fifo_w_nodes, fifo_r_nodes,
                                          fifo_w_blocking)]
-        c_kind = np.asarray(
-            [0 if _QC_IS_READ_SIDE[c[0]] else 1 for c in self.constraints],
-            np.int64)
+        # read-side query codes are _QC_READ_NB (0) and _QC_EMPTY (2)
+        c_kind = (cons_cols[:, 0] % 2).astype(np.int64)
         engine._incr_cache = CompiledGraph(
             n=n,
             raw_dst=raw_dst.copy(),
@@ -1774,15 +2613,15 @@ class HybridSim:
             seq_w=seq_w.copy(),
             fifos=fifos_cg,
             c_kind=c_kind,
-            c_fifo=np.asarray([c[1] for c in self.constraints], np.int64),
-            c_seq=np.asarray([c[2] for c in self.constraints], np.int64),
-            c_src=np.asarray([c.source_node for c in constraints], np.int64),
-            c_out=np.asarray([c[5] for c in self.constraints], bool),
+            c_fifo=cons_cols[:, 1].copy(),
+            c_seq=cons_cols[:, 2].copy(),
+            c_src=src_col,
+            c_out=cons_cols[:, 5] != 0,
         )
         n_segments = 0
-        for st in mods:
-            blk = np.asarray([k <= OP_WRITE for k in st.kind], dtype=bool)
-            if len(blk):
+        for rk in row_kind_parts:
+            if len(rk):
+                blk = rk <= OP_WRITE
                 n_segments += int(blk[0]) + int(
                     np.count_nonzero(blk[1:] & ~blk[:-1]))
         engine._hybrid = {
@@ -1791,6 +2630,11 @@ class HybridSim:
             "forced_false": self.forced,
             "phases": self.phases,
             "segments": n_segments,      # maximal compiled blocking runs
+            "bulk_queries": self.bulk_queries,   # periodized poll outcomes
+            "bursts": self.bursts,
+            "batch_rows": self.batch_rows,       # batch-solver commits
+            "batch_solves": self.batch_solves,
+            "cache_bulk_rows": self.cache_bulk_rows,
         }
         # commit the memoization cache only on success
         if self.cache is not None:
@@ -1812,7 +2656,8 @@ class HybridSim:
 
 
 def simulate_hybrid(program: Program, max_steps: int = 50_000_000,
-                    cache: Optional[HybridCache] = None) -> SimResult:
+                    cache: Optional[HybridCache] = None,
+                    periodize: bool = True) -> SimResult:
     """Segmented trace-compiled simulation for dynamic designs.
 
     Records and array-replays the blocking segments between NB/probe query
@@ -1822,9 +2667,15 @@ def simulate_hybrid(program: Program, max_steps: int = 50_000_000,
     ``engine="omnisim-hybrid"`` and a pre-built incremental cache so
     ``resimulate``/``resimulate_batch`` work unchanged.  ``cache`` (a
     :class:`HybridCache`) memoizes module yield streams across repeated
-    simulations of the same design shape.  Raises
+    simulations of the same design shape.  ``periodize`` (default True)
+    enables steady-state query periodization: fixed poll loops resolve K
+    definitively-false outcomes per step against the committed time tables
+    instead of one generator resumption per query (disable it to benchmark
+    or to cross-check the per-query path — results are bit-identical
+    either way, see ``tests/test_golden.py``).  Raises
     :class:`TraceUnsupported` on deadlocks and SPSC violations; callers
     normally go through ``repro.core.simulate(..., trace="auto")`` which
     falls back to the generator engine for the paper-exact report.
     """
-    return HybridSim(program, cache=cache, max_steps=max_steps).run()
+    return HybridSim(program, cache=cache, max_steps=max_steps,
+                     periodize=periodize).run()

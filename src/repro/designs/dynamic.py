@@ -72,6 +72,70 @@ def watchdog_pipe(items: int = 2048, stages: int = 4, depth: int = 16,
     return prog
 
 
+def fig2_poll_burst(items: int = 2048, stages: int = 2, depth: int = 8,
+                    gaps=(1, 1, 1, 1, 1, 2, 1, 1, 1, 7)) -> Program:
+    """A ``fig2_timer``-class poller with *bursty, non-uniform* poll gaps.
+
+    A small blocking pipeline streams ``items`` elements; the sink signals
+    completion on ``done`` and a poller ReadNB-polls it, but with a gap that
+    cycles through ``gaps`` instead of staying fixed — bursts of back-to-back
+    polls separated by longer pauses, like a core that polls a status
+    register hard right after issuing work and backs off in between.  The
+    query periodizer's steady-state detector only fires inside the
+    constant-gap runs and must fall back to per-query interpretation at
+    every gap change, so this design exercises both the burst fast path and
+    its divergence fallback (``benchmarks/tables.py::
+    table_query_periodization`` reports the speedup for both profiles).
+    """
+    prog = Program("fig2_poll_burst", declared_type="C")
+    done = prog.fifo("done", 1)
+    links = [prog.fifo(f"q{i}", depth) for i in range(stages + 1)]
+
+    @prog.module("poller")            # first: auto-probe bails out fast
+    def poller():
+        polls = 0
+        i = 0
+        while True:
+            ok, _ = yield ReadNB(done)
+            polls += 1
+            if ok:
+                break
+            g = gaps[i % len(gaps)]
+            i += 1
+            if g > 1:
+                yield Delay(g - 1)
+        yield Emit("polls", polls)
+
+    @prog.module("source")
+    def source():
+        for i in range(items):
+            yield Write(links[0], (i * 5 + 1) % 241)
+
+    def make_stage(k: int):
+        def stage():
+            acc = 0
+            for _ in range(items):
+                v = yield Read(links[k])
+                acc = (acc + v * (k + 2)) % 65521
+                yield Write(links[k + 1], (v * 7 + k) % 241)
+            yield Emit(f"stage{k}_acc", acc)
+        return stage
+
+    for k in range(stages):
+        prog.add_module(f"stage{k}", make_stage(k))
+
+    @prog.module("sink")
+    def sink():
+        total = 0
+        for _ in range(items):
+            total += (yield Read(links[stages]))
+        yield Write(done, 1)
+        yield Emit("checksum", total)
+
+    return prog
+
+
 DYNAMIC_DESIGNS = {
     "watchdog_pipe": watchdog_pipe,
+    "fig2_poll_burst": fig2_poll_burst,
 }

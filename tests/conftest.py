@@ -1,0 +1,23 @@
+"""Shared pytest plumbing.
+
+``--regen-golden`` switches the golden-trace conformance suite
+(``tests/test_golden.py``) from *asserting* against the checked-in
+reference results to *rewriting* them from the generator engine — so an
+intentional behavior change is one command away and shows up as a
+reviewable diff of ``tests/golden/*.json``::
+
+    PYTHONPATH=src python -m pytest -m golden --regen-golden
+"""
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--regen-golden", action="store_true", default=False,
+        help="rewrite tests/golden/*.json from the generator engine "
+             "instead of asserting against them")
+
+
+@pytest.fixture
+def regen_golden(request):
+    return request.config.getoption("--regen-golden")

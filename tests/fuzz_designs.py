@@ -133,6 +133,54 @@ def _interp(name: str, script, fifos):
                     fl = yield Full(fifos[fid], used=used)
                     if used:
                         acc = (acc * 13 + (4 if fl else 5)) % MOD
+            elif op == "POLLV":
+                # poll loop with a (possibly non-uniform) gap pattern —
+                # periodizer material: constant runs burst, gap changes and
+                # the final success force the per-query fallback
+                _, fid, max_polls, pattern = ins
+                gi = 0
+                for _ in range(max_polls):
+                    ok, _v = yield ReadNB(fifos[fid])
+                    polls += 1
+                    if ok:
+                        acc = (acc * 13 + 1) % MOD
+                        break
+                    g = pattern[gi % len(pattern)]
+                    gi += 1
+                    if g > 1:
+                        yield Delay(g - 1)
+            elif op == "PTR":
+                # probe-then-read: a commit between queries breaks the
+                # periodic pattern, so bursts must re-arm per probe run
+                _, fid, n_items, tries, gap = ins
+                got = 0
+                for _ in range(tries):
+                    if got >= n_items:
+                        break
+                    e = yield Empty(fifos[fid])
+                    if not e:
+                        v = yield Read(fifos[fid])
+                        got += 1
+                        acc = (acc * 31 + v + 7) % MOD
+                    elif gap:
+                        yield Delay(gap)
+                acc = (acc * 7 + got) % MOD
+            elif op == "NEST":
+                # nested NB polling: two query sites alternate, so no
+                # single-site streak forms unless the inner site is removed
+                _, fid_done, fid_data, max_polls, gap = ins
+                for _ in range(max_polls):
+                    ok, _v = yield ReadNB(fifos[fid_done])
+                    polls += 1
+                    if ok:
+                        acc = (acc * 13 + 1) % MOD
+                        break
+                    ok2, v2 = yield ReadNB(fifos[fid_data])
+                    polls += 1
+                    if ok2:
+                        acc = (acc * 31 + v2 + 7) % MOD
+                    if gap:
+                        yield Delay(gap)
             elif op == "W1":
                 yield Write(fifos[ins[1]], ins[2])
             elif op == "D":
@@ -221,4 +269,82 @@ def build_case(seed: int, scale: int = 1):
     meta = dict(n=n, stages=n_stages, prod=prod_style, lossy=any(lossy),
                 feedback=feedback, watchdog=watchdog, ring=ring,
                 ring_prime=ring_prime)
+    return builder, meta
+
+
+# ---------------------------------------------------------------------------
+# Query-dominated poll-loop cases (ISSUE 4): exercise the hybrid engine's
+# steady-state query periodizer — its burst fast path AND its divergence
+# fallback — plus the provisional-times batch solver under parked writers.
+# ---------------------------------------------------------------------------
+_POLL_PATTERNS = (
+    (1,),                      # tight uniform loop: one burst covers the run
+    (2,), (3,), (5,),          # uniform with gap
+    (1, 1, 1, 4),              # bursty: periodic runs + divergence per cycle
+    (1, 1, 1, 1, 1, 2, 1, 7),  # long constant runs, two break points
+    (1, 2, 3),                 # no run of >= 3 equal gaps: never bursts
+)
+
+
+def build_poll_case(seed: int, scale: int = 1):
+    """Derive (builder, meta) for a poll-dominated design.
+
+    A blocking source -> sink pipeline streams ``n`` items; the sink
+    signals per-poller ``done`` FIFOs, and 1-3 pollers hammer them with
+    seeded poll-loop shapes: uniform and bursty gap patterns (``POLLV``),
+    probe-then-read consumption (``PTR``, commits between queries), nested
+    NB reads (``NEST``, alternating query sites) — mid-run outcome
+    divergence (the final successful poll, every gap-pattern change) comes
+    with the territory.  Bounded attempt budgets keep every module
+    terminating, so under-drained pipelines surface as reported deadlocks,
+    never hangs.
+    """
+    rng = random.Random(seed * 0x517CC1B7 + 0xB5EED)
+    n = rng.randint(6, 24) * scale
+    depth = rng.randint(1, 6)
+    n_pollers = rng.randint(1, 3)
+    sink_ptr = rng.random() < 0.35      # probe-then-read sink
+    sink_tries = 4 * n + 16
+    ptr_gap = rng.choice([0, 1, 2])
+    nest = rng.random() < 0.4           # one poller also NB-reads a side FIFO
+    side_extra = rng.randint(0, 3)
+    patterns = [rng.choice(_POLL_PATTERNS) for _ in range(n_pollers)]
+    max_polls = [rng.randint(4, 40) * scale for _ in range(n_pollers)]
+    sink_delay = rng.choice([0, 0, 1, 2])
+
+    def builder() -> Program:
+        prog = Program(f"fuzz_poll_{seed}", declared_type=None)
+        data = prog.fifo("data", depth)
+        dones = [prog.fifo(f"done{i}", 1) for i in range(n_pollers)]
+        side = prog.fifo("side", max(1, depth // 2)) if nest else None
+        fifos = [data] + dones + ([side] if side else [])
+        i_side = len(fifos) - 1
+
+        # pollers first: trace="auto" aborts to the hybrid path immediately
+        for i in range(n_pollers):
+            if nest and i == 0:
+                script = [("NEST", 1 + i, i_side, max_polls[i],
+                           patterns[i][0] - 1)]
+            else:
+                script = [("POLLV", 1 + i, max_polls[i], patterns[i])]
+            prog.add_module(f"poll{i}", _interp(f"poll{i}", script, fifos))
+
+        src_script = [("SRC", 0, n, "B", -1, 0, 0, False, 0)]
+        if nest:
+            src_script.append(("SRC", i_side, side_extra + 1, "B",
+                               -1, 0, 0, False, 0))
+        prog.add_module("src", _interp("src", src_script, fifos))
+
+        if sink_ptr:
+            sink_script = [("PTR", 0, n, sink_tries, ptr_gap)]
+        else:
+            sink_script = [("SINK", 0, n, False, 0, 0, -1, 0)]
+        if sink_delay:
+            sink_script.append(("D", sink_delay))
+        sink_script += [("W1", 1 + i, 1) for i in range(n_pollers)]
+        prog.add_module("sink", _interp("sink", sink_script, fifos))
+        return prog
+
+    meta = dict(n=n, depth=depth, pollers=n_pollers, patterns=patterns,
+                sink_ptr=sink_ptr, nest=nest)
     return builder, meta

@@ -1,0 +1,21 @@
+#!/usr/bin/env python
+"""Regenerate the golden-trace reference files in this directory.
+
+Usage (from the repo root)::
+
+    PYTHONPATH=src python tests/golden/regen.py
+
+Equivalent to ``python -m pytest -m golden --regen-golden``.  The rewritten
+``tests/golden/*.json`` diff is the review artifact for any intentional
+behavior change — commit it alongside the change that caused it.
+"""
+import os
+import sys
+
+_TESTS_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _TESTS_DIR)
+
+import test_golden  # noqa: E402
+
+if __name__ == "__main__":
+    test_golden.regen_all()

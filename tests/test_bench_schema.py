@@ -43,6 +43,12 @@ REQUIRED_KEYS = {
     "hybrid_sim_hybrid_us_watchdog_pipe": numbers.Real,
     "hybrid_queries_watchdog_pipe": numbers.Integral,
     "hybrid_ops_watchdog_pipe": numbers.Integral,
+    # PR 4: steady-state query periodization (poll-loop bursts)
+    "query_periodization_speedup_fig2_timer": numbers.Real,
+    "query_periodization_speedup_fig2_poll_burst": numbers.Real,
+    "query_periodization_sim_generator_us_fig2_timer": numbers.Real,
+    "query_periodization_sim_hybrid_us_fig2_timer": numbers.Real,
+    "query_periodization_bulk_queries_fig2_timer": numbers.Integral,
 }
 
 _DOC_KEY = re.compile(r"^\|\s*`([a-z0-9_]+)`\s*\|", re.MULTILINE)

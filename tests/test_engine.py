@@ -344,6 +344,94 @@ def test_forced_false_tie_same_cycle():
         assert s.outputs == g.outputs and s.cycles == g.cycles
 
 
+def test_forced_false_tie_same_cycle_under_periodization():
+    """Same-cycle forced-false ties with long periodic streaks: the poll
+    detector arms on both symmetric pollers, but undecidable outcomes must
+    never burst (the target event is uncommitted), so every resolution
+    still goes through the earliest-query rule — and when a mid-run write
+    finally lands, the burst window must stop exactly at the first poll
+    whose outcome flips.  Generator, periodized hybrid, un-periodized
+    hybrid and the RTL oracle all agree, including forced-false counts."""
+    from repro.core.trace import simulate_hybrid
+
+    def build():
+        prog = Program("tie_periodized", declared_type="C")
+        ab = prog.fifo("ab", 1)
+        ba = prog.fifo("ba", 1)
+
+        @prog.module("a")              # 14 tight polls: streak >= 3 arms
+        def a():
+            hits = 0
+            for _ in range(14):
+                ok, _v = yield ReadNB(ba)
+                hits += int(ok)
+            yield WriteNB(ab, 1)       # lands mid-way through b's loop
+            yield Emit("a_hits", hits)
+
+        @prog.module("b")
+        def b():
+            hits = 0
+            for _ in range(14):
+                ok, _v = yield ReadNB(ab)
+                hits += int(ok)
+            yield WriteNB(ba, 2)
+            yield Emit("b_hits", hits)
+
+        return prog
+
+    g = simulate(build(), trace="never")
+    hp = simulate_hybrid(build(), periodize=True)
+    hn = simulate_hybrid(build(), periodize=False)
+    r = simulate_rtl(build())
+    assert g.outputs == hp.outputs == hn.outputs == r.outputs
+    assert g.cycles == hp.cycles == hn.cycles == r.cycles
+    assert g.stats.queries == hp.stats.queries == hn.stats.queries
+    assert (g.stats.queries_forced_false == hp.stats.queries_forced_false
+            == hn.stats.queries_forced_false >= 2)
+    assert g.stats.nodes == hp.stats.nodes and g.stats.edges == hp.stats.edges
+
+
+def test_periodized_burst_stops_at_outcome_flip():
+    """A poller whose target write lands mid-loop: the periodizer may bulk-
+    resolve only the polls strictly before the write's commit cycle — the
+    flip poll and everything after go through per-query resolution, so the
+    hit count and every stat match the generator engine exactly."""
+    from repro.core.trace import simulate_hybrid
+
+    def build():
+        prog = Program("flip", declared_type="C")
+        sig = prog.fifo("sig", 2)
+
+        @prog.module("poller")
+        def poller():
+            hits = 0
+            polls = 0
+            while hits < 2 and polls < 60:
+                ok, _v = yield ReadNB(sig)
+                polls += 1
+                hits += int(ok)
+            yield Emit("polls", polls)
+            yield Emit("hits", hits)
+
+        @prog.module("writer")
+        def writer():
+            yield Delay(17)
+            yield Write(sig, 1)        # flips the poller's 18th-ish poll
+            yield Delay(23)
+            yield Write(sig, 2)
+
+        return prog
+
+    g = simulate(build(), trace="never")
+    h = simulate_hybrid(build())
+    assert g.outputs == h.outputs and g.cycles == h.cycles
+    assert g.stats.queries == h.stats.queries
+    assert g.stats.queries_forced_false == h.stats.queries_forced_false
+    assert h.stats.queries_periodized > 0          # bursts actually fired
+    assert h.stats.queries_periodized < h.stats.queries
+    assert g.outputs["hits"] == 2
+
+
 def test_dead_probe_elimination():
     def build(used):
         prog = Program("deadprobe", declared_type="C")

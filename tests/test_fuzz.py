@@ -22,11 +22,12 @@ seeds up.  No hypothesis dependency — plain seeded randomness.
 import numpy as np
 import pytest
 
-from fuzz_designs import build_case
+from fuzz_designs import build_case, build_poll_case
 from repro.core import resimulate, resimulate_batch, simulate
-from repro.core.trace import HybridCache
+from repro.core.trace import HybridCache, TraceUnsupported, simulate_hybrid
 
 N_TIER1_SEEDS = 208
+N_POLL_SEEDS = 48
 
 
 def _assert_equal(g, a, seed, check_stats=True):
@@ -108,6 +109,78 @@ def test_fuzz_differential(seed):
 @pytest.mark.parametrize("seed", range(N_TIER1_SEEDS, N_TIER1_SEEDS + 100))
 def test_fuzz_differential_long_tail(seed):
     _run_case(seed, scale=6)
+
+
+def _run_poll_case(seed, scale=1):
+    """Differential cross-check for the query-periodization fuzz corpus:
+    generator reference vs auto (periodized hybrid) vs the un-periodized
+    hybrid — the burst fast path and the per-query path must agree
+    bit-for-bit, including query/forced-false stats."""
+    builder, meta = build_poll_case(seed, scale=scale)
+    g = simulate(builder(), trace="never")
+    a = simulate(builder(), trace="auto")
+    _assert_equal(g, a, (seed, meta))
+    assert a.stats.queries_forced_false == g.stats.queries_forced_false, seed
+    if not g.deadlock:
+        hp = simulate_hybrid(builder(), periodize=True)
+        hn = simulate_hybrid(builder(), periodize=False)
+        _assert_equal(g, hp, (seed, "periodized", meta))
+        _assert_equal(g, hn, (seed, "no-periodize", meta))
+        assert hn.stats.queries_periodized == 0, seed
+    if seed % 3 == 0 and not g.deadlock:
+        cache = HybridCache()
+        r1 = simulate(builder(), trace="auto", hybrid_cache=cache)
+        r2 = simulate(builder(), trace="auto", hybrid_cache=cache)
+        _assert_equal(r1, r2, (seed, "poll-memo"))
+
+
+@pytest.mark.parametrize("seed", range(N_POLL_SEEDS))
+def test_fuzz_poll_differential(seed):
+    _run_poll_case(seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(N_POLL_SEEDS, N_POLL_SEEDS + 24))
+def test_fuzz_poll_differential_long_tail(seed):
+    _run_poll_case(seed, scale=5)
+
+
+def test_fuzz_poll_exercises_periodizer():
+    """The poll corpus must hit both sides of the periodizer: bulk-resolved
+    bursts AND queries left to per-query interpretation (gap changes,
+    nested sites, final successes)."""
+    bulk = bursts = per_query = 0
+    for seed in range(N_POLL_SEEDS):
+        builder, _ = build_poll_case(seed)
+        try:
+            r = simulate_hybrid(builder())
+        except TraceUnsupported:
+            continue                   # reported deadlocks stay covered above
+        info = r.graph._hybrid
+        bulk += info["bulk_queries"]
+        bursts += info["bursts"]
+        per_query += info["queries"] - info["bulk_queries"]
+    assert bulk > 0 and bursts > 0       # fast path exercised
+    assert per_query > 0                 # fallback exercised
+
+
+def test_fuzz_poll_exercises_batch_solver():
+    """The tier-1 poll cases are too small to cross the default batch-
+    solver threshold, so a corpus slice runs with the solver forced on
+    (batch_min=1) and is cross-checked against the generator engine —
+    periodization and the batch solver compose on real fuzz designs."""
+    from repro.core.trace import HybridSim
+
+    batch = 0
+    for seed in range(0, N_POLL_SEEDS, 5):
+        builder, meta = build_poll_case(seed)
+        g = simulate(builder(), trace="never")
+        if g.deadlock:
+            continue
+        hb = HybridSim(builder(), batch_min=1).run()
+        _assert_equal(g, hb, (seed, "batch-forced", meta))
+        batch += hb.graph._hybrid["batch_rows"]
+    assert batch > 0                     # the solver actually committed rows
 
 
 def test_fuzz_covers_all_engines():

@@ -1,0 +1,221 @@
+"""Golden-trace conformance suite (ISSUE 4).
+
+``tests/golden/*.json`` holds generator-engine reference results — cycles,
+outputs, FIFO table digests, query/forced-false stats, plus a depth-variant
+record — for every taxonomy + dynamic design in the corpus below.  Each
+test asserts that *every* engine path reproduces its design's reference
+exactly:
+
+  * ``generator``     — ``simulate(trace="never")`` (the reference itself);
+  * ``auto``          — whatever ``trace="auto"`` selects (straight-line
+                        trace, periodized hybrid, or generator fallback);
+  * ``hybrid``        — ``simulate_hybrid(periodize=False)``, per-query;
+  * ``periodized``    — ``simulate_hybrid(periodize=True)``, burst path;
+  * ``resimulate`` / ``resimulate_batch`` — the depth-variant record.
+
+Future refactors therefore cannot silently drift any path.  Intentional
+behavior changes are refreshed with one auditable command (the diff of the
+JSON files is the review artifact)::
+
+    PYTHONPATH=src python -m pytest -m golden --regen-golden
+    # or: PYTHONPATH=src python tests/golden/regen.py
+"""
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import resimulate, resimulate_batch, simulate
+from repro.core.trace import TraceUnsupported, simulate_hybrid
+from repro.designs.dynamic import fig2_poll_burst, watchdog_pipe
+from repro.designs.paper import PAPER_DESIGNS
+from repro.designs.typea import (fir_filter, high_latency_pipe,
+                                 merge_sort_staged, parallel_loops,
+                                 producer_consumer, skynet_like)
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "golden")
+
+# Small, fast instances — tier-1 runs the whole corpus on every path.
+GOLDEN_DESIGNS = {
+    # the paper's Type B/C designs (Table 4)
+    "fig4_ex2": lambda: PAPER_DESIGNS["fig4_ex2"](n=96),
+    "fig4_ex3": lambda: PAPER_DESIGNS["fig4_ex3"](n=96),
+    "fig4_ex4a": lambda: PAPER_DESIGNS["fig4_ex4a"](n=96),
+    "fig4_ex4a_d": lambda: PAPER_DESIGNS["fig4_ex4a_d"](n=96),
+    "fig4_ex4b": lambda: PAPER_DESIGNS["fig4_ex4b"](n=96),
+    "fig4_ex4b_d": lambda: PAPER_DESIGNS["fig4_ex4b_d"](n=96),
+    "fig4_ex5": lambda: PAPER_DESIGNS["fig4_ex5"](n=96),
+    "fig2_timer": lambda: PAPER_DESIGNS["fig2_timer"](n=96),
+    "deadlock": lambda: PAPER_DESIGNS["deadlock"](n=16),
+    "branch": lambda: PAPER_DESIGNS["branch"](prog_len=128),
+    "multicore": lambda: PAPER_DESIGNS["multicore"](cores=4, prog_len=32),
+    # dynamic designs beyond the paper
+    "watchdog_pipe": lambda: watchdog_pipe(items=96, stages=2, depth=4,
+                                           poll_gap=16),
+    "fig2_poll_burst": lambda: fig2_poll_burst(items=96, stages=2, depth=4),
+    # Type A taxonomy designs (straight-line trace path)
+    "producer_consumer": lambda: producer_consumer(n=64),
+    "fir_filter": lambda: fir_filter(n=96, taps=4),
+    "parallel_loops": lambda: parallel_loops(n=64),
+    "merge_sort_staged": lambda: merge_sort_staged(log_n=4),
+    "skynet_like": lambda: skynet_like(items=96, depth=8),
+    "high_latency_pipe": lambda: high_latency_pipe(items=24, stages=3,
+                                                   ii=16),
+}
+
+
+def _normalize(obj):
+    """JSON-stable view: tuples -> lists, recursively, sorted dict keys."""
+    if isinstance(obj, dict):
+        return {str(k): _normalize(v) for k, v in sorted(obj.items())}
+    if isinstance(obj, (list, tuple)):
+        return [_normalize(v) for v in obj]
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    return obj
+
+
+def _fifo_digest(result) -> str:
+    """Order-insensitive digest of every FIFO table's end state (commit
+    times per side + leftover payloads)."""
+    h = hashlib.sha256()
+    for tbl in result.graph.fifos:
+        h.update(np.sort(np.asarray(tbl.write_times, np.int64)).tobytes())
+        h.update(b"|")
+        h.update(np.sort(np.asarray(tbl.read_times, np.int64)).tobytes())
+        h.update(b"|")
+        h.update(repr(list(tbl.values)).encode())
+        h.update(b"#")
+    return h.hexdigest()
+
+
+def _record(result) -> dict:
+    """The conformance record every engine path must reproduce."""
+    return {
+        "cycles": int(result.cycles),
+        "deadlock": bool(result.deadlock),
+        "deadlock_cycle": int(result.deadlock_cycle),
+        "outputs": _normalize(result.outputs),
+        "fifo_digest": _fifo_digest(result),
+        "n_constraints": len(result.constraints),
+        "stats": {
+            "nodes": int(result.stats.nodes),
+            "edges": int(result.stats.edges),
+            "queries": int(result.stats.queries),
+            "queries_forced_false": int(result.stats.queries_forced_false),
+            "skipped_probes": int(result.stats.skipped_probes),
+        },
+    }
+
+
+def reference_record(name: str) -> dict:
+    """Build a design's golden record from the generator engine."""
+    builder = GOLDEN_DESIGNS[name]
+    base = simulate(builder(), trace="never")
+    rec = _record(base)
+    rec["depths"] = [int(d) for d in base.depths]
+    try:
+        simulate_hybrid(builder())
+        rec["hybrid_supported"] = True
+    except TraceUnsupported:
+        rec["hybrid_supported"] = False
+    if not base.deadlock:
+        dv = tuple(d + 1 for d in base.depths)
+        var = simulate(builder(), depths=dv, trace="never")
+        rec["variant_depths"] = list(dv)
+        rec["variant"] = {
+            "cycles": int(var.cycles),
+            "deadlock": bool(var.deadlock),
+            "outputs": _normalize(var.outputs),
+        }
+    return rec
+
+
+def golden_path(name: str) -> str:
+    return os.path.join(GOLDEN_DIR, f"{name}.json")
+
+
+def write_golden(name: str) -> dict:
+    rec = reference_record(name)
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    with open(golden_path(name), "w") as f:
+        json.dump(rec, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return rec
+
+
+def regen_all() -> None:
+    for name in sorted(GOLDEN_DESIGNS):
+        rec = write_golden(name)
+        print(f"wrote golden/{name}.json  cycles={rec['cycles']} "
+              f"deadlock={rec['deadlock']}")
+
+
+@pytest.mark.golden
+@pytest.mark.parametrize("name", sorted(GOLDEN_DESIGNS))
+def test_golden_conformance(name, regen_golden):
+    if regen_golden:
+        write_golden(name)
+        return
+    path = golden_path(name)
+    assert os.path.exists(path), (
+        f"missing golden reference {path} — run "
+        f"`python -m pytest -m golden --regen-golden` and commit the diff")
+    with open(path) as f:
+        golden = json.load(f)
+    core = {k: golden[k] for k in ("cycles", "deadlock", "deadlock_cycle",
+                                   "outputs", "fifo_digest", "n_constraints",
+                                   "stats")}
+    builder = GOLDEN_DESIGNS[name]
+
+    g = simulate(builder(), trace="never")
+    assert _record(g) == core, f"{name}: generator path drifted"
+    assert [int(d) for d in g.depths] == golden["depths"], name
+
+    a = simulate(builder(), trace="auto")
+    assert _record(a) == core, f"{name}: auto path ({a.engine}) drifted"
+
+    try:
+        hp = simulate_hybrid(builder(), periodize=True)
+        hybrid_supported = True
+    except TraceUnsupported:
+        hybrid_supported = False
+    assert hybrid_supported == golden["hybrid_supported"], name
+    if hybrid_supported:
+        assert _record(hp) == core, f"{name}: periodized-hybrid drifted"
+        hn = simulate_hybrid(builder(), periodize=False)
+        assert _record(hn) == core, f"{name}: hybrid (per-query) drifted"
+
+    if "variant" in golden:
+        dv = tuple(golden["variant_depths"])
+        vref = golden["variant"]
+        inc = resimulate(a, dv)
+        assert int(inc.result.cycles) == vref["cycles"], name
+        assert bool(inc.result.deadlock) == vref["deadlock"], name
+        assert _normalize(inc.result.outputs) == vref["outputs"], name
+        D = np.asarray([dv, golden["depths"]], dtype=np.int64)
+        out = resimulate_batch(g, D)
+        assert int(out.cycles[0]) == vref["cycles"], name
+        assert int(out.cycles[1]) == golden["cycles"], name
+
+
+def test_golden_corpus_is_complete():
+    """Every design in the corpus has a committed reference, and no stale
+    reference file outlives its design."""
+    have = {f[:-5] for f in os.listdir(GOLDEN_DIR) if f.endswith(".json")}
+    assert have == set(GOLDEN_DESIGNS), (
+        f"golden corpus mismatch: missing={sorted(set(GOLDEN_DESIGNS) - have)} "
+        f"stale={sorted(have - set(GOLDEN_DESIGNS))} — run "
+        f"`python -m pytest -m golden --regen-golden` and commit the diff")
+
+
+def test_golden_corpus_covers_all_engine_paths():
+    """The corpus must exercise the straight-line trace, the hybrid and the
+    generator-fallback paths under trace="auto"."""
+    engines = set()
+    for name, builder in GOLDEN_DESIGNS.items():
+        engines.add(simulate(builder(), trace="auto").engine)
+    assert engines == {"omnisim", "omnisim-trace", "omnisim-hybrid"}

@@ -213,3 +213,130 @@ def test_simulate_hybrid_direct_entry():
     r = simulate_hybrid(PAPER_DESIGNS["branch"](prog_len=64))
     g = simulate(PAPER_DESIGNS["branch"](prog_len=64), trace="never")
     _assert_bit_identical(g, r, "direct")
+
+
+# ------------------------------------------------- batch frontier solver
+def test_batch_solver_truncates_at_unrecorded_sources():
+    """Provisional-prefix validation: the producer's recorded writes run
+    far past the consumer's recorded reads (the consumer is parked at a
+    query), so the batch solver must truncate the producer's window at the
+    first write whose WAR-target read is unrecorded — committing only the
+    validated prefix — and still match the generator engine exactly."""
+    from repro.core.trace import HybridSim
+    from repro.core.program import ReadNB as _ReadNB
+
+    def build():
+        prog = Program("trunc", declared_type="C")
+        data = prog.fifo("data", 2)
+        go = prog.fifo("go", 1)
+
+        @prog.module("producer")       # records all 40 writes untimed
+        def producer():
+            for i in range(40):
+                yield Write(data, i)
+            yield Emit("sent", 40)
+
+        @prog.module("consumer")       # parked at the poll while the
+        def consumer():                # producer's window runs ahead
+            polls = 0
+            for _ in range(10):
+                ok, _v = yield _ReadNB(go)
+                polls += 1
+                if ok:
+                    break
+            total = 0
+            for _ in range(40):
+                total += (yield Read(data))
+            yield Emit("got", (total, polls))
+
+        return prog
+
+    g = simulate(build(), trace="never")
+    h = HybridSim(build(), batch_min=1).run()
+    _assert_bit_identical(g, h, "trunc")
+    info = h.graph._hybrid
+    assert info["batch_rows"] > 0          # batch solver actually engaged
+    assert g.stats.queries_forced_false == h.stats.queries_forced_false > 0
+
+
+def test_batch_solver_matches_scalar_frontier_on_coupled_pipeline():
+    """Cross-module constraints land inside the provisional windows of a
+    tightly-coupled pipeline (depth-sized WAR ping-pong): the batch solver
+    and the scalar frontier must commit identical times, and both must
+    match the generator engine."""
+    from repro.core.trace import HybridSim
+
+    b = lambda: watchdog_pipe(items=192, stages=3, depth=4, poll_gap=8)
+    g = simulate(b(), trace="never")
+    hb = HybridSim(b(), batch_min=1).run()         # batch solver forced
+    hs = HybridSim(b(), batch_min=10**9).run()     # scalar frontier only
+    _assert_bit_identical(g, hb, "batch")
+    _assert_bit_identical(g, hs, "scalar")
+    assert hb.graph._hybrid["batch_rows"] > 0
+    assert hs.graph._hybrid["batch_rows"] == 0
+    np.testing.assert_array_equal(hb.graph.graph.times(),
+                                  hs.graph.graph.times())
+
+
+def test_batch_solver_war_cycle_defers_to_generator():
+    """A WAR cycle inside the provisional window (recorded order invalid
+    under these depths): the batch solver must detect non-convergence,
+    commit nothing, and let the run defer to the generator engine's exact
+    deadlock report — with and without the batch solver forced on."""
+    from repro.core.trace import HybridSim
+    from repro.core.program import ReadNB as _ReadNB
+
+    def build():
+        prog = Program("warcycle", declared_type="C")
+        x = prog.fifo("x", 1)
+        y = prog.fifo("y", 1)
+        z = prog.fifo("z", 1)
+
+        @prog.module("a")
+        def a():
+            ok, _ = yield _ReadNB(z)   # dynamic: forces the hybrid path
+            yield Write(x, 0)
+            yield Write(x, 1)
+            v = yield Read(y)
+            yield Emit("a", (ok, v))
+
+        @prog.module("b")
+        def b():
+            yield Write(y, 0)
+            yield Write(y, 1)
+            v = yield Read(x)
+            yield Emit("b", v)
+
+        return prog
+
+    with pytest.raises(TraceUnsupported):
+        HybridSim(build(), batch_min=1).run()
+    with pytest.raises(TraceUnsupported):
+        HybridSim(build(), batch_min=10**9).run()
+    g = simulate(build(), trace="never")
+    assert g.deadlock
+    a = simulate(build(), trace="auto")    # falls back to the generator
+    assert a.engine == "omnisim"
+    assert a.deadlock and a.deadlock_cycle == g.deadlock_cycle
+    assert a.outputs == g.outputs
+
+
+def test_periodizer_stats_and_disable_knob():
+    """Periodized and per-query paths are bit-identical; the knob and the
+    stats plumbing (SimStats.queries_periodized, _hybrid counters) report
+    what actually happened."""
+    b = lambda: PAPER_DESIGNS["fig2_timer"](n=192)
+    g = simulate(b(), trace="never")
+    hp = simulate_hybrid(b(), periodize=True)
+    hn = simulate_hybrid(b(), periodize=False)
+    _assert_bit_identical(g, hp, "periodized")
+    _assert_bit_identical(g, hn, "no-periodize")
+    assert hp.stats.queries_periodized > 0
+    assert hp.graph._hybrid["bulk_queries"] == hp.stats.queries_periodized
+    assert hp.graph._hybrid["bursts"] >= 1
+    assert hn.stats.queries_periodized == 0
+    assert g.stats.queries_periodized == 0     # generator engine: never set
+    # simulate() forwards the knob
+    hp2 = simulate(b(), trace="always", periodize=False)
+    _assert_bit_identical(g, hp2, "simulate-knob")
+    assert hp2.stats.queries_periodized == 0

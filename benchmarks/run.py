@@ -10,7 +10,7 @@ re-simulation, trace-compiled and hybrid segmented initial simulation) to
 ``BENCH_core.json`` so future PRs have a machine-readable trajectory to
 compare against.
 
-``--quick`` runs only the four key-producing benchmarks at reduced sizes —
+``--quick`` runs only the key-producing benchmarks at reduced sizes —
 every required key is still written (tests/test_bench_schema.py validates
 the schema), but the values are not comparable with the full-size
 trajectory, so quick output defaults to ``BENCH_core.quick.json`` (or
@@ -31,7 +31,7 @@ def main(quick: bool = False, out: str = None) -> None:
                                    table5_vs_decoupled, table6_batch_dse,
                                    table6_incremental, table_hybrid_replay,
                                    table_query_periodization,
-                                   table_trace_replay)
+                                   table_sweep_service, table_trace_replay)
     rows = []
     if not quick:
         rows += table3_funcsim()
@@ -40,6 +40,7 @@ def main(quick: bool = False, out: str = None) -> None:
         rows += table5_vs_decoupled()
         rows += table6_incremental()
     rows += table6_batch_dse()
+    rows += table_sweep_service()
     rows += table_trace_replay()
     rows += table_hybrid_replay()
     rows += table_query_periodization()

@@ -1,36 +1,32 @@
-"""FIFO-sizing design-space exploration with incremental re-simulation.
+"""FIFO-sizing design-space exploration, served.
 
     PYTHONPATH=src python examples/fifo_sizing_dse.py
 
-The paper's Table 6 workflow at design scale: pick a dataflow accelerator
-(the SkyNet-like deep pipeline), sweep every internal channel depth, and use
-incremental re-simulation to evaluate each point in ~microseconds instead of
-a full run.  Points whose constraints break fall back to a full re-sim
-automatically.
+The paper's Table 6 workflow at design scale, in three acts:
 
-Two modes are shown:
+  1. **One-at-a-time** ``resimulate`` — one depth vector per call (the
+     paper's original flow), each point verified against a from-scratch
+     simulation.
+  2. **The sweep service** (``repro.sweep``): submit whole candidate
+     matrices against a warm compiled-graph cache.  Heterogeneous
+     requests coalesce into shared solver blocks, duplicate depth
+     vectors are solved once, results stream back per config, and small
+     interactive queries jump the bulk queue via the priority lane.
+  3. **Search drivers** (``repro.sweep.search``) consuming the stream:
+     random search and successive-halving FIFO-area minimization, both
+     reporting the Pareto frontier of (total FIFO depth, latency) — the
+     designer's actual decision surface.
 
-  * one-at-a-time ``resimulate`` — one depth vector per call (the paper's
-    original Table 6 flow);
-  * ``resimulate_batch`` — the whole candidate set as ONE (K, n_fifos)
-    matrix.  All K configurations share a single compiled-graph cache and
-    one vectorized fixpoint/constraint pass; structurally-infeasible or
-    constraint-violating rows fall back to a full re-sim individually.
-    This is the API to use for real sweeps (10^3-10^5 configs):
-
-        depths = np.stack([...])                 # (K, n_fifos)
-        out = resimulate_batch(base_result, depths)
-        best = depths[int(np.argmin(out.cycles))]
-
-    ``out.ok`` marks reused rows, ``out.cycles`` is exact for every row,
-    ``out.reasons[k]`` explains any fallback.
+Every cycle count below is exact: reused configs come from the shared
+batched fixpoint, diverging configs from automatic full re-simulation.
 """
 import time
 
 import numpy as np
 
-from repro.core import resimulate, resimulate_batch, simulate
+from repro.core import resimulate, simulate
 from repro.designs.typea import skynet_like
+from repro.sweep import SweepService, random_search, successive_halving
 
 
 def main():
@@ -39,9 +35,10 @@ def main():
     base = simulate(base_prog)
     t_full = time.perf_counter() - t0
     print(f"initial run: cycles={base.cycles}  ({t_full*1e3:.0f} ms)\n")
+
+    # ---- act 1: the paper's one-at-a-time incremental flow ----
     print(f"{'depths':>10s} {'cycles':>8s} {'method':>12s} {'time':>10s} "
           f"{'speedup':>8s}")
-
     n_chan = len(base.depths)
     for d in (1, 2, 4, 8, 16):
         new_depths = tuple([d] * n_chan)
@@ -55,22 +52,49 @@ def main():
                                                    inc.result.cycles)
         print(f"{d:10d} {inc.result.cycles:8d} {method:>12s} "
               f"{dt*1e3:9.2f}ms {t_full/dt:7.1f}x")
-    print("\nall points verified exact against full re-simulation")
+    print("all points verified exact against full re-simulation\n")
 
-    # ---- batched sweep: the whole design space in one call ----
-    rng = np.random.default_rng(0)
-    K = 512
-    D = rng.integers(2, 17, size=(K, n_chan))
-    resimulate_batch(base, D[:2])                # warm the compiled cache
-    t0 = time.perf_counter()
-    out = resimulate_batch(base, D)
-    dt = time.perf_counter() - t0
-    best = int(np.argmin(out.cycles))
-    print(f"\nbatched sweep: {K} configs in {dt*1e3:.1f} ms "
-          f"({out.us_per_config():.0f} us/config), "
-          f"{out.n_reused} reused / {out.n_fallback} full re-sims")
-    print(f"best config: cycles={int(out.cycles[best])} "
-          f"depths={tuple(int(x) for x in D[best])}")
+    # ---- acts 2+3: the served sweep ----
+    with SweepService(block=128, shards=2) as svc:
+        svc.warm(base)                       # adopt the base run (no re-sim)
+
+        # a bulk random sweep and an interactive what-if, concurrently:
+        # the 2-config query rides the priority lane past the bulk blocks
+        rng = np.random.default_rng(0)
+        D = rng.integers(2, 17, size=(512, n_chan))
+        bulk = svc.submit(base, D, priority="bulk")
+        probe = svc.submit(base, np.array([[4] * n_chan, [16] * n_chan]))
+        t0 = time.perf_counter()
+        po = probe.result()
+        t_probe = time.perf_counter() - t0
+        print(f"interactive probe (2 cfgs) answered in {t_probe*1e3:.1f} ms "
+              f"while the bulk sweep runs: "
+              f"depth-4 {int(po.cycles[0])} / depth-16 {int(po.cycles[1])} "
+              f"cycles")
+        out = bulk.result()
+        best = int(np.argmin(np.where(out.cycles < 0, 1 << 60, out.cycles)))
+        print(f"bulk sweep: {len(D)} configs ({out.n_unique} unique) in "
+              f"{out.elapsed_s*1e3:.1f} ms, {out.n_reused} reused / "
+              f"{out.n_fallback} full re-sims; best cycles="
+              f"{int(out.cycles[best])}")
+
+        # search drivers: FIFO-area minimization on a smaller instance
+        prog = skynet_like(items=96, depth=8)
+        ro = random_search(svc, prog, n=128, lo=1, hi=16, seed=1)
+        sh = successive_halving(svc, prog, n0=32, rounds=3, eta=2,
+                                lo=1, hi=16, seed=1)
+        print(f"\nrandom search : {ro.summary()}")
+        print(f"succ. halving : {sh.summary()}")
+        print("\npareto frontier (total depth, cycles) from halving:")
+        for dv, area, cyc in sh.pareto:
+            print(f"  area={area:4d}  cycles={cyc:6d}")
+
+        st = svc.stats()
+        print(f"\nservice stats: cache hit rate "
+              f"{st['cache']['hit_rate']:.2f}, "
+              f"{st['scheduler']['blocks']} blocks, dedup "
+              f"{st['scheduler']['dedup_ratio']:.2f}x, "
+              f"{st['scheduler']['fallbacks']} fallback re-sims")
 
 
 if __name__ == "__main__":

@@ -26,8 +26,8 @@ from .rtlsim import simulate_rtl
 from .taxonomy import Classification, classify, classify_dynamic
 from .trace import (CompiledTrace, HybridCache, HybridSim, ModuleTrace,
                     RecordedTrace, TraceSimGraph, TraceUnsupported,
-                    compile_trace, record_trace, simulate_hybrid,
-                    simulate_traced)
+                    compile_trace, program_fingerprint, record_trace,
+                    simulate_hybrid, simulate_traced)
 
 __all__ = [
     "OmniSim", "simulate", "simulate_rtl", "LightningSim", "csim",
@@ -41,5 +41,5 @@ __all__ = [
     "classify_dynamic",
     "TraceUnsupported", "RecordedTrace", "ModuleTrace", "CompiledTrace",
     "TraceSimGraph", "record_trace", "compile_trace", "simulate_traced",
-    "HybridCache", "HybridSim", "simulate_hybrid",
+    "HybridCache", "HybridSim", "simulate_hybrid", "program_fingerprint",
 ]

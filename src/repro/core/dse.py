@@ -40,7 +40,9 @@ small graphs.
 """
 from __future__ import annotations
 
+import threading
 import time as _time
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -53,6 +55,24 @@ from .program import SimResult
 
 # per-config status codes
 REUSED, DEADLOCK, CYCLE, VIOLATED = 0, 1, 2, 3
+
+# Per-Program re-entrant locks serializing every transient in-place
+# mutation (the fallback re-simulation sets FIFO depths and restores
+# them) against readers of that state on other threads — notably the
+# sweep cache's fingerprint-and-build path.  Per Program, not global:
+# unrelated designs must not stall behind one design's engine re-sims.
+_LOCK_CREATE = threading.Lock()
+
+
+def program_mutation_lock(program) -> threading.RLock:
+    lock = getattr(program, "_mutation_lock", None)
+    if lock is None:
+        with _LOCK_CREATE:
+            lock = getattr(program, "_mutation_lock", None)
+            if lock is None:
+                lock = threading.RLock()
+                program._mutation_lock = lock
+    return lock
 
 _STATUS_REASON = {
     REUSED: "constraints satisfied",
@@ -217,6 +237,7 @@ class BatchOutcome:
     results: List[Optional[SimResult]]
     elapsed_s: float
     fixpoint_rounds: int = 0
+    n_unique: int = 0              # distinct depth rows actually solved
 
     @property
     def n_reused(self) -> int:
@@ -471,37 +492,29 @@ def _solve_block_numpy(ba: _BatchArrays, Db: np.ndarray):
     return times_out, conv_out, sweeps
 
 
-def resimulate_batch(result: SimResult, depth_matrix,
-                     fallback: bool = True, backend: str = "numpy",
-                     block: int = 128,
-                     jax_interpret: bool = True) -> BatchOutcome:
-    """Incrementally re-simulate ``result`` under K depth vectors at once.
+def solve_block_status(cache: CompiledGraph, depth_block,
+                       backend: str = "numpy", block: int = 128,
+                       jax_interpret: bool = True):
+    """Engine-free solve phase of :func:`resimulate_batch`.
 
-    ``depth_matrix``: (K, n_fifos) array-like of candidate depths.  Returns
-    a :class:`BatchOutcome` whose k-th entry is exactly what
-    ``resimulate(result, depth_matrix[k])`` would report — reusable configs
-    get their cycle count from the shared batched fixpoint; deadlocked,
-    cyclic or constraint-violating configs fall back to a full
-    re-simulation (``fallback=True``) of just that config.
+    Classifies a block of depth vectors against ``cache`` alone — no
+    ``OmniSim`` engine, no Python generators, no fallback re-simulation —
+    which makes it the unit of work the sweep service (``repro/sweep``)
+    ships to shard workers: a :class:`~repro.core.incremental.CompiledGraph`
+    pickles cleanly (numpy arrays + the lazily rebuilt ``_BatchArrays``
+    view), so a worker process holding only the compiled graph can solve
+    any depth block of that design.
 
-    ``backend="jax"`` lowers the fixpoint onto the dense Pallas max-plus
-    kernel via ``jax.vmap`` (device-resident sweeps; small graphs only);
-    ``backend="reference"`` runs the synchronous Jacobi oracle.  ``block``
-    bounds the numpy working set (configs per fixpoint slab).
+    Returns ``(status, cycles, violated, fixpoint_rounds)`` — per config:
+    REUSED with its exact cycle count, or DEADLOCK / CYCLE / VIOLATED with
+    ``cycles = -1`` (the caller decides whether to pay for the exact
+    fallback re-simulation, which *does* need the engine).
     """
-    t0 = _time.perf_counter()
-    engine: OmniSim = result.graph
-    assert isinstance(engine, OmniSim), "batched re-sim needs an OmniSim result"
-    D = np.asarray(depth_matrix, dtype=np.int64)
+    ba = _batch_arrays(cache)
+    D = np.asarray(depth_block, dtype=np.int64)
     if D.ndim == 1:
         D = D[None, :]
-    K, F = D.shape
-    if F != len(engine.fifos):
-        raise ValueError(f"depth_matrix has {F} columns for "
-                         f"{len(engine.fifos)} FIFOs")
-    cache = compile_graph(engine)
-    ba = _batch_arrays(cache)
-
+    K = len(D)
     status = np.zeros(K, dtype=np.int8)
     cycles = np.full(K, -1, dtype=np.int64)
     violated = np.zeros(K, dtype=np.int64)
@@ -542,44 +555,134 @@ def resimulate_batch(result: SimResult, depth_matrix,
                     cyc = (t_nm.max(axis=0) if t_nm.shape[0]
                            else np.zeros(len(rows), np.int64))
                     cycles[rows[good]] = cyc[good]
+    return status, cycles, violated, total_rounds
 
-    # ④ fall back to full re-simulation for exactly the failed subset
-    results: List[Optional[SimResult]] = [None] * K
-    reasons: List[str] = [""] * K
-    saved_depths = engine.program.depths()
-    try:
-        for k in range(K):
-            if status[k] == REUSED:
-                reasons[k] = _STATUS_REASON[REUSED]
-                results[k] = SimResult(
-                    program=result.program, outputs=dict(result.outputs),
-                    cycles=int(cycles[k]), engine="omnisim-batch",
-                    stats=result.stats, graph=engine,
-                    constraints=result.constraints,
-                    depths=tuple(int(d) for d in D[k]))
-                continue
-            if status[k] == DEADLOCK:
-                fid = int(np.flatnonzero(D[k] < ba.fifo_need)[0])
-                reasons[k] = (f"a committed write on "
-                              f"'{engine.fifos[fid].name}' can never commit "
-                              f"with depth {int(D[k, fid])} (would deadlock)")
-            elif status[k] == CYCLE:
-                reasons[k] = _STATUS_REASON[CYCLE]
-            else:
-                reasons[k] = (f"{int(violated[k])} constraint(s) violated — "
-                              f"control/data flow diverges")
-            if fallback:
-                full = simulate(engine.program,
-                                depths=tuple(int(d) for d in D[k]))
-                results[k] = full
-                cycles[k] = full.cycles
-    finally:
-        engine.program.with_depths(saved_depths)
 
-    return BatchOutcome(ok=status == REUSED, cycles=cycles, status=status,
-                        violated=violated, reasons=reasons, results=results,
+def status_reason(cache: CompiledGraph, status_k: int, violated_k: int,
+                  depths_row: np.ndarray,
+                  fifo_names: Optional[List[str]] = None) -> str:
+    """Human-readable verdict for one config of :func:`solve_block_status`
+    (exactly the strings :func:`resimulate_batch` reports)."""
+    if status_k == REUSED:
+        return _STATUS_REASON[REUSED]
+    if status_k == CYCLE:
+        return _STATUS_REASON[CYCLE]
+    if status_k == DEADLOCK:
+        ba = _batch_arrays(cache)
+        fid = int(np.flatnonzero(depths_row < ba.fifo_need)[0])
+        name = fifo_names[fid] if fifo_names else f"fifo{fid}"
+        return (f"a committed write on '{name}' can never commit "
+                f"with depth {int(depths_row[fid])} (would deadlock)")
+    return (f"{int(violated_k)} constraint(s) violated — "
+            f"control/data flow diverges")
+
+
+def materialize_block(result: SimResult, Du: np.ndarray,
+                      status_u: np.ndarray, cycles_u: np.ndarray,
+                      violated_u: np.ndarray, fallback_mask: np.ndarray,
+                      engine_label: str = "omnisim-batch", lock=None):
+    """Post-solve verdict assembly shared by :func:`resimulate_batch` and
+    the sweep scheduler (``repro/sweep/scheduler.py``).
+
+    For each unique depth row: the human-readable reason string, a
+    lightweight REUSED :class:`SimResult` shell carrying the solved cycle
+    count, or — where ``fallback_mask`` allows — the exact fallback full
+    re-simulation (``cycles_u`` is updated in place with its result).
+    ``lock`` serializes the fallback (it temporarily mutates Program FIFO
+    depths); the sweep scheduler passes the design's entry lock, direct
+    library calls need none.  Returns ``(results_u, reasons_u)``.
+    """
+    engine: OmniSim = result.graph
+    cache = compile_graph(engine)
+    fifo_names = [f.name for f in engine.fifos]
+    U = len(Du)
+    results_u: List[Optional[SimResult]] = [None] * U
+    reasons_u: List[str] = [""] * U
+    for u in range(U):
+        reasons_u[u] = status_reason(cache, int(status_u[u]),
+                                     int(violated_u[u]), Du[u], fifo_names)
+        if status_u[u] == REUSED:
+            results_u[u] = SimResult(
+                program=result.program, outputs=dict(result.outputs),
+                cycles=int(cycles_u[u]), engine=engine_label,
+                stats=result.stats, graph=engine,
+                constraints=result.constraints,
+                depths=tuple(int(d) for d in Du[u]))
+        elif fallback_mask[u]:
+            with (lock if lock is not None else nullcontext()), \
+                    program_mutation_lock(engine.program):
+                saved = engine.program.depths()
+                try:
+                    full = simulate(engine.program,
+                                    depths=tuple(int(d) for d in Du[u]))
+                finally:
+                    engine.program.with_depths(saved)
+            results_u[u] = full
+            cycles_u[u] = full.cycles
+    return results_u, reasons_u
+
+
+def resimulate_batch(result: SimResult, depth_matrix,
+                     fallback: bool = True, backend: str = "numpy",
+                     block: int = 128,
+                     jax_interpret: bool = True,
+                     dedup: bool = True) -> BatchOutcome:
+    """Incrementally re-simulate ``result`` under K depth vectors at once.
+
+    ``depth_matrix``: (K, n_fifos) array-like of candidate depths.  Returns
+    a :class:`BatchOutcome` whose k-th entry is exactly what
+    ``resimulate(result, depth_matrix[k])`` would report — reusable configs
+    get their cycle count from the shared batched fixpoint; deadlocked,
+    cyclic or constraint-violating configs fall back to a full
+    re-simulation (``fallback=True``) of just that config.
+
+    ``dedup`` (default True) collapses identical depth rows before solving:
+    only the unique rows pay for the fixpoint, the constraint re-check AND
+    any fallback re-simulation — duplicate rows share one result object.
+    Sweep drivers routinely re-propose configurations (grids revisit corner
+    points, halving rounds re-evaluate survivors), so this keeps solver
+    work proportional to the number of *distinct* configs
+    (``BatchOutcome.n_unique``).
+
+    ``backend="jax"`` lowers the fixpoint onto the dense Pallas max-plus
+    kernel via ``jax.vmap`` (device-resident sweeps; small graphs only);
+    ``backend="reference"`` runs the synchronous Jacobi oracle.  ``block``
+    bounds the numpy working set (configs per fixpoint slab).
+    """
+    t0 = _time.perf_counter()
+    engine: OmniSim = result.graph
+    assert isinstance(engine, OmniSim), "batched re-sim needs an OmniSim result"
+    D = np.asarray(depth_matrix, dtype=np.int64)
+    if D.ndim == 1:
+        D = D[None, :]
+    K, F = D.shape
+    if F != len(engine.fifos):
+        raise ValueError(f"depth_matrix has {F} columns for "
+                         f"{len(engine.fifos)} FIFOs")
+    cache = compile_graph(engine)
+
+    if dedup and K > 1:
+        Du, inverse = np.unique(D, axis=0, return_inverse=True)
+        inverse = inverse.reshape(-1)
+    else:
+        Du, inverse = D, np.arange(K)
+    U = len(Du)
+    status_u, cycles_u, violated_u, total_rounds = solve_block_status(
+        cache, Du, backend=backend, block=block, jax_interpret=jax_interpret)
+
+    # ④ fall back to full re-simulation for exactly the failed subset —
+    # once per unique config; duplicate rows share the result object
+    results_u, reasons_u = materialize_block(
+        result, Du, status_u, cycles_u, violated_u,
+        np.full(U, bool(fallback)))
+
+    status = status_u[inverse]
+    return BatchOutcome(ok=status == REUSED, cycles=cycles_u[inverse],
+                        status=status, violated=violated_u[inverse],
+                        reasons=[reasons_u[i] for i in inverse],
+                        results=[results_u[i] for i in inverse],
                         elapsed_s=_time.perf_counter() - t0,
-                        fixpoint_rounds=total_rounds)
+                        fixpoint_rounds=total_rounds, n_unique=U)
 
 
 # ---------------------------------------------------------------------------

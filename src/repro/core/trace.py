@@ -54,6 +54,7 @@ paper Table 2.
 from __future__ import annotations
 
 import heapq
+import types
 from collections import deque
 from dataclasses import dataclass, field
 from itertools import repeat
@@ -62,7 +63,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from .events import Constraint, Node, NodeKind, RequestType, SimStats
-from .program import (Delay, Emit, Empty, Full, Program, Read, ReadNB,
+from .program import (Delay, Emit, Empty, Fifo, Full, Program, Read, ReadNB,
                       SimResult, Write, WriteNB)
 
 NEGI = np.int64(-(1 << 60))
@@ -748,6 +749,129 @@ for _name in ("__len__", "__iter__", "__getitem__", "__eq__", "__ne__",
               "remove", "pop", "sort", "reverse", "clear"):
     setattr(_LazyConstraints, _name, _lazy_forcing(_name))
 del _name
+
+
+# ---------------------------------------------------------------------------
+# Content-addressed design keys: warm-cache reuse of the pre-built graph
+# ---------------------------------------------------------------------------
+def _fp_update(h, obj, depth: int = 0) -> None:
+    """Feed ``obj`` into hash ``h`` by *content*, not identity.
+
+    Function objects are fingerprinted by bytecode + consts + defaults +
+    closure contents (recursively), FIFOs by name/depth, arrays by bytes —
+    so two Programs built by the same builder with the same arguments hash
+    equal even though every call allocates fresh function/Fifo objects,
+    while changing any captured argument (``items=512`` vs ``1024``)
+    changes the key.
+
+    Failure direction matters: unknown values must never make two
+    *different* designs collide.  Past the recursion bound, and for
+    objects with no content-based handling, we hash ``repr`` — plain
+    containers stay content-addressed, and an object whose repr embeds
+    its address merely produces an unstable key (a safe cache miss, never
+    a false hit).  Default-``__repr__`` instances are recursed through
+    ``vars()`` so ordinary config objects captured by closures still hash
+    by content.
+    """
+    if depth > 8:                        # defensive bound on weird closures
+        h.update(b"<deep>")
+        h.update(repr(obj).encode())     # still content-based for data
+        return
+    if isinstance(obj, types.FunctionType):
+        def all_names(code):             # incl. nested lambdas/inner defs
+            names = set(code.co_names)
+            for c in code.co_consts:
+                if isinstance(c, types.CodeType):
+                    names |= all_names(c)
+            return names
+
+        code = obj.__code__
+        h.update(b"fn(")
+        h.update(code.co_code)
+        _fp_update(h, code.co_consts, depth + 1)
+        h.update(repr(code.co_names).encode())
+        _fp_update(h, obj.__defaults__, depth + 1)
+        _fp_update(h, obj.__kwdefaults__, depth + 1)
+        if obj.__closure__:
+            for cell in obj.__closure__:
+                try:
+                    _fp_update(h, cell.cell_contents, depth + 1)
+                except ValueError:
+                    h.update(b"<empty>")
+        # module-level state the body reads is design content too (a
+        # global `N` changing between builds changes the trace) — also
+        # when the read happens inside a nested lambda/inner def; modules
+        # hash by name only — importing numpy is not design identity
+        g = obj.__globals__
+        for name in sorted(all_names(code) & set(g)):
+            h.update(name.encode())
+            v = g[name]
+            if isinstance(v, types.ModuleType):
+                h.update(v.__name__.encode())
+            else:
+                _fp_update(h, v, depth + 1)
+        h.update(b")")
+    elif isinstance(obj, types.CodeType):
+        h.update(b"code(")
+        h.update(obj.co_code)
+        _fp_update(h, obj.co_consts, depth + 1)
+        h.update(repr(obj.co_names).encode())
+        h.update(b")")
+    elif isinstance(obj, Fifo):
+        h.update(f"Fifo({obj.name},{obj.depth})".encode())
+    elif isinstance(obj, np.ndarray):
+        h.update(obj.tobytes())
+    elif isinstance(obj, (list, tuple)):
+        h.update(b"(" if isinstance(obj, tuple) else b"[")
+        for x in obj:
+            _fp_update(h, x, depth + 1)
+            h.update(b",")
+        h.update(b"]")
+    elif isinstance(obj, dict):
+        h.update(b"{")
+        for k in obj:
+            _fp_update(h, k, depth + 1)
+            h.update(b":")
+            _fp_update(h, obj[k], depth + 1)
+        h.update(b"}")
+    elif type(obj).__repr__ is object.__repr__:
+        # default repr would embed the instance address (a new key every
+        # builder call — the cache would never hit): hash the class plus
+        # the attribute dict by content instead
+        h.update(type(obj).__qualname__.encode())
+        try:
+            _fp_update(h, vars(obj), depth + 1)
+        except TypeError:                # __slots__ etc.: accept misses
+            h.update(repr(obj).encode())
+    else:
+        h.update(repr(obj).encode())
+
+
+def program_fingerprint(program: Program) -> str:
+    """Stable content-addressed key of a design (sha256 hex digest).
+
+    Module bodies are pure and re-runnable by the :class:`Program`
+    contract, so the recorded trace — and therefore the compiled graph,
+    the base simulation and every ``resimulate``/``resimulate_batch``
+    verdict derived from it — is a pure function of what this fingerprint
+    hashes: FIFO names/depths plus each module generator's bytecode,
+    constants, defaults and captured closure values.  Equal fingerprints ⇒
+    interchangeable base runs, which is exactly the guarantee the sweep
+    service's warm cache (``repro.sweep.cache.GraphCache``) needs to serve
+    repeat requests for a design without re-recording or re-hoisting
+    anything.
+    """
+    import hashlib
+    h = hashlib.sha256()
+    h.update(program.name.encode())
+    for f in program.fifos:
+        h.update(b"|F")
+        _fp_update(h, f)
+    for m in program.modules:
+        h.update(b"|M")
+        h.update(m.name.encode())
+        _fp_update(h, m.fn)
+    return h.hexdigest()
 
 
 # ---------------------------------------------------------------------------

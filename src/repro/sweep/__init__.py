@@ -1,0 +1,32 @@
+"""Served design-space exploration: sharded, streaming FIFO-depth sweeps
+from a warm compiled-graph cache.
+
+The subsystem that turns ``repro.core.resimulate_batch`` — a blocking,
+single-host library call — into a multi-tenant workload (the ROADMAP's
+"serve DSE requests against a warm CompiledGraph cache" item):
+
+  * :mod:`repro.sweep.cache`     — content-addressed LRU of warm
+    ``(SimResult, CompiledGraph, _BatchArrays)`` design entries;
+  * :mod:`repro.sweep.scheduler` — continuous batching: cross-tenant
+    block coalescing, in-block dedup, worker sharding, per-config
+    streaming, cancellation, priority lanes;
+  * :mod:`repro.sweep.service`   — the front door
+    (``SweepService.submit/stream/sweep/stats``);
+  * :mod:`repro.sweep.search`    — grid / random / successive-halving
+    drivers producing (FIFO area, latency) Pareto frontiers.
+
+See ``docs/sweep_guide.md`` for the walkthrough.
+"""
+from .cache import CacheEntry, GraphCache
+from .scheduler import (BULK, CANCELLED, INTERACTIVE, BlockScheduler,
+                        ConfigResult)
+from .search import (SearchOutcome, grid_search, pareto_front,
+                     random_search, successive_halving)
+from .service import SweepHandle, SweepService
+
+__all__ = [
+    "BlockScheduler", "BULK", "CacheEntry", "CANCELLED", "ConfigResult",
+    "GraphCache", "grid_search", "INTERACTIVE", "pareto_front",
+    "random_search", "SearchOutcome", "successive_halving", "SweepHandle",
+    "SweepService",
+]

@@ -1,0 +1,404 @@
+"""Continuous batching of depth-vector requests over warm compiled graphs.
+
+The serving loop of ``serve/engine.py::ContinuousBatchingEngine`` — admit
+work into the next batch as slots free up, keep the expensive kernel hot —
+transplanted onto the DSE solver.  The unit of execution here is a *block*:
+up to ``block`` depth rows against ONE design, assembled fresh each step
+from however many client requests are queued (heterogeneous requests
+against the same design coalesce into shared blocks), deduplicated down to
+unique rows, solved by :func:`repro.core.dse.solve_block_status`, and
+streamed back **per config** — a client starts receiving results for its
+first rows while its later rows are still queued behind other tenants.
+
+Scheduling policy:
+
+  * two lanes — ``"interactive"`` (small requests) and ``"bulk"``.  The
+    interactive lane is always served first, so a 4-config what-if query
+    lands in the very next block even while a 10^5-config sweep is
+    draining; after ``starvation_limit`` consecutive interactive blocks
+    one bulk block is forced through, so a flood of interactive queries
+    cannot starve bulk sweeps either.
+  * within a lane, requests are FIFO; a block anchors on the oldest live
+    request and pulls same-design rows from every queued request (both
+    lanes) to fill up — the cross-tenant coalescing that makes the batch
+    solver earn its keep.
+  * identical depth rows inside a block (across tenants!) are solved
+    once; every duplicate row is answered from the same solve.
+
+Sharding: a block's unique rows are split across ``shards`` workers —
+``mode="thread"`` (the single-host fallback: numpy releases the GIL in the
+cummax sweeps; all workers share the warm ``_BatchArrays`` view) or
+``mode="process"`` (workers hold their own unpickled
+:class:`~repro.core.incremental.CompiledGraph` per design key, the
+multi-host/device stand-in — blocks-over-workers is the same
+data-parallel decomposition ``distrib/sharding.py`` applies to batches
+over mesh axes).  Chunks are concatenated in submission order, so results
+are bit-identical for every ``shards``/``mode`` setting.
+
+Exactness: a block's verdicts and cycle counts are exactly
+``resimulate_batch``'s — REUSED rows from the shared fixpoint, failed rows
+(deadlock / WAR cycle / constraint flip) through the same full
+re-simulation fallback (run once per unique row, on the scheduler thread,
+under the design's entry lock because it temporarily mutates Program FIFO
+depths).
+
+Cancellation: a cancelled request stops being scheduled at the next block
+boundary; rows already solved are dropped, the client's stream is closed
+with a terminal sentinel, and undelivered rows surface as ``CANCELLED`` in
+the assembled outcome.
+"""
+from __future__ import annotations
+
+import pickle
+import threading
+import time as _time
+from collections import OrderedDict, deque
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from ..core.dse import REUSED, materialize_block, solve_block_status
+from ..core.program import SimResult
+from .cache import CacheEntry
+
+# extends core.dse's per-config codes (REUSED/DEADLOCK/CYCLE/VIOLATED)
+CANCELLED = 4
+
+INTERACTIVE, BULK = "interactive", "bulk"
+
+_DONE = object()                     # per-request stream terminator
+
+
+class ConfigResult(NamedTuple):
+    """One streamed per-config verdict (exactly ``resimulate_batch``'s)."""
+
+    request_id: int
+    index: int                       # row in the request's depth matrix
+    depths: Tuple[int, ...]
+    ok: bool
+    status: int                      # REUSED/DEADLOCK/CYCLE/VIOLATED
+    cycles: int                      # exact; -1 if fallback was disabled
+    violated: int                    # flipped constraint outcomes
+    reason: str
+    result: Optional[SimResult]
+
+
+class _Request:
+    __slots__ = ("rid", "entry", "D", "K", "fallback", "priority", "out_q",
+                 "cancelled", "cursor", "delivered", "finalized", "error",
+                 "t_submit")
+
+    def __init__(self, rid: int, entry: CacheEntry, D: np.ndarray,
+                 priority: str, fallback: bool, out_q):
+        self.rid = rid
+        self.entry = entry
+        self.D = D
+        self.K = len(D)
+        self.fallback = fallback
+        self.priority = priority
+        self.out_q = out_q
+        self.cancelled = threading.Event()
+        self.cursor = 0              # rows handed to blocks so far
+        self.delivered = 0
+        self.finalized = False
+        self.error: Optional[str] = None   # set when aborted by a fault
+        self.t_submit = _time.perf_counter()
+
+
+class _Block(NamedTuple):
+    entry: CacheEntry
+    items: List[Tuple[_Request, int]]    # (request, row index) per row
+    lane: str
+
+
+# ---------------------------------------------------------------- process
+# Worker-side graph cache for mode="process": each worker unpickles a
+# design's CompiledGraph once and keeps it warm across blocks.  The blob
+# rides along with every task (pool workers cannot be targeted), but
+# unpickling is skipped on all but the first arrival per key.  Bounded
+# LRU: host-side GraphCache evictions never reach the workers, so an
+# unbounded dict would leak one graph per design ever swept.
+_WORKER_GRAPHS: "OrderedDict[str, object]" = OrderedDict()
+_WORKER_GRAPHS_CAP = 16
+
+
+def _process_shard_solve(key: str, blob: bytes, Db: np.ndarray,
+                         backend: str, block: int):
+    graph = _WORKER_GRAPHS.get(key)
+    if graph is None:
+        graph = pickle.loads(blob)
+        _WORKER_GRAPHS[key] = graph
+        while len(_WORKER_GRAPHS) > _WORKER_GRAPHS_CAP:
+            _WORKER_GRAPHS.popitem(last=False)
+    else:
+        _WORKER_GRAPHS.move_to_end(key)
+    return solve_block_status(graph, Db, backend=backend, block=block)
+
+
+class BlockScheduler:
+    """Lane-based continuous batching of sweep requests (see module doc)."""
+
+    def __init__(self, block: int = 128, shards: int = 1,
+                 mode: str = "thread", starvation_limit: int = 4,
+                 backend: str = "numpy", min_shard_rows: int = 8):
+        assert mode in ("serial", "thread", "process"), mode
+        self.block = max(int(block), 1)
+        self.shards = max(int(shards), 1)
+        self.mode = mode if self.shards > 1 else "serial"
+        self.starvation_limit = max(int(starvation_limit), 1)
+        self.backend = backend
+        self.min_shard_rows = min_shard_rows
+        self._lanes: Dict[str, deque] = {INTERACTIVE: deque(),
+                                         BULK: deque()}
+        self._cv = threading.Condition()
+        self._consec_interactive = 0
+        self._pool = None
+        if self.mode == "thread":
+            from concurrent.futures import ThreadPoolExecutor
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.shards,
+                thread_name_prefix="sweep-shard")
+        elif self.mode == "process":
+            from concurrent.futures import ProcessPoolExecutor
+            self._pool = ProcessPoolExecutor(max_workers=self.shards)
+        # counters (guarded by _cv's lock)
+        self.stats_blocks = 0
+        self.stats_blocks_interactive = 0
+        self.stats_blocks_bulk = 0
+        self.stats_rows = 0              # rows placed into blocks
+        self.stats_rows_unique = 0       # rows actually solved
+        self.stats_fallbacks = 0         # full re-simulations run
+        self.stats_cancelled_rows = 0
+        self.stats_requests = 0
+
+    # ------------------------------------------------------------- intake
+    def submit(self, request: _Request) -> None:
+        with self._cv:
+            self._lanes[request.priority].append(request)
+            self.stats_requests += 1
+            self._cv.notify_all()
+
+    def kick(self) -> None:
+        """Wake the loop (e.g. after a cancellation) so terminal sentinels
+        are delivered promptly."""
+        with self._cv:
+            self._cv.notify_all()
+
+    # ----------------------------------------------------------- assembly
+    def _finalize(self, req: _Request) -> None:
+        if not req.finalized:
+            req.finalized = True
+            self.stats_cancelled_rows += req.K - req.delivered
+            req.out_q.put(_DONE)
+
+    def _reap_cancelled(self, lane: deque) -> None:
+        # reap ANYWHERE in the lane, not just the front: a cancelled
+        # request's stream must close at the next scheduling point even
+        # with a long bulk queue ahead of it
+        for req in [r for r in lane if r.cancelled.is_set()]:
+            lane.remove(req)
+            self._finalize(req)
+
+    def abort_pending(self, message: str) -> None:
+        """Fail every queued request (scheduler fault or service close):
+        mark the error and deliver the terminal sentinel so no client
+        blocks forever on a stream that will never finish."""
+        with self._cv:
+            for lane in self._lanes.values():
+                for req in list(lane):
+                    req.error = req.error or message
+                    self._finalize(req)
+                lane.clear()
+
+    def _pick_lane(self) -> Optional[str]:
+        """Interactive first; one bulk block is forced through after
+        ``starvation_limit`` consecutive interactive blocks."""
+        self._reap_cancelled(self._lanes[INTERACTIVE])
+        self._reap_cancelled(self._lanes[BULK])
+        has_i = bool(self._lanes[INTERACTIVE])
+        has_b = bool(self._lanes[BULK])
+        if not has_b:
+            # starvation debt only accrues while bulk work actually
+            # waits — a stale counter must not let a fresh bulk sweep
+            # preempt the interactive lane
+            self._consec_interactive = 0
+        if has_i and has_b:
+            if self._consec_interactive >= self.starvation_limit:
+                return BULK
+            return INTERACTIVE
+        if has_i:
+            return INTERACTIVE
+        if has_b:
+            return BULK
+        return None
+
+    def _assemble(self) -> Optional[_Block]:
+        """Build the next block: anchor on the chosen lane's oldest live
+        request, fill with same-design rows from every queued request."""
+        with self._cv:
+            lane_name = self._pick_lane()
+            if lane_name is None:
+                return None
+            lane = self._lanes[lane_name]
+            anchor = lane[0]
+            items: List[Tuple[_Request, int]] = []
+            for scan in (lane_name, BULK if lane_name == INTERACTIVE
+                         else INTERACTIVE):
+                q = self._lanes[scan]
+                for req in list(q):
+                    if len(items) >= self.block:
+                        break
+                    if req.cancelled.is_set():
+                        continue         # reaped at the front eventually
+                    if req.entry is not anchor.entry:
+                        continue
+                    take = min(self.block - len(items), req.K - req.cursor)
+                    items.extend((req, i) for i in
+                                 range(req.cursor, req.cursor + take))
+                    req.cursor += take
+                    if req.cursor >= req.K:
+                        q.remove(req)
+            if lane_name == INTERACTIVE:
+                # starvation debt accrues only while bulk work waits
+                self._consec_interactive = (self._consec_interactive + 1
+                                            if self._lanes[BULK] else 0)
+                self.stats_blocks_interactive += 1
+            else:
+                self._consec_interactive = 0
+                self.stats_blocks_bulk += 1
+            self.stats_blocks += 1
+            self.stats_rows += len(items)
+            return _Block(anchor.entry, items, lane_name)
+
+    # -------------------------------------------------------------- solve
+    def _solve_unique(self, entry: CacheEntry, Du: np.ndarray):
+        """Solve the unique rows of a block, sharded across workers."""
+        U = len(Du)
+        if (self._pool is None or U < self.min_shard_rows
+                or self.shards == 1):
+            return solve_block_status(entry.graph, Du,
+                                      backend=self.backend,
+                                      block=self.block)
+        chunks = np.array_split(Du, min(self.shards, U))
+        if self.mode == "process":
+            blob = entry.graph_blob()
+            futs = [self._pool.submit(_process_shard_solve, entry.key,
+                                      blob, ch, self.backend, self.block)
+                    for ch in chunks if len(ch)]
+        else:
+            futs = [self._pool.submit(solve_block_status, entry.graph, ch,
+                                      backend=self.backend,
+                                      block=self.block)
+                    for ch in chunks if len(ch)]
+        parts = [f.result() for f in futs]    # submission order: stable
+        status = np.concatenate([p[0] for p in parts])
+        cycles = np.concatenate([p[1] for p in parts])
+        violated = np.concatenate([p[2] for p in parts])
+        rounds = max(p[3] for p in parts)
+        return status, cycles, violated, rounds
+
+    # ------------------------------------------------------------ deliver
+    def _deliver(self, blk: _Block) -> None:
+        entry = blk.entry
+        rows = np.stack([req.D[i] for (req, i) in blk.items])
+        Du, inverse = np.unique(rows, axis=0, return_inverse=True)
+        inverse = inverse.reshape(-1)
+        with self._cv:
+            self.stats_rows_unique += len(Du)
+        status_u, cycles_u, violated_u, _ = self._solve_unique(entry, Du)
+
+        # a failed unique row pays for its exact fallback only if a LIVE
+        # request owning it asked for fallback (a cancelled tenant's rows
+        # must not cost engine re-simulations nobody will receive)
+        fb_mask = np.zeros(len(Du), dtype=bool)
+        for pos, (req, _i) in enumerate(blk.items):
+            if req.fallback and not req.cancelled.is_set():
+                fb_mask[inverse[pos]] = True
+        # exact fallback needs the engine: once per unique row, under the
+        # design's entry lock (depths are mutated + restored); the shared
+        # dse helper keeps verdicts byte-identical to resimulate_batch's
+        results_u, reasons_u = materialize_block(
+            entry.result, Du, status_u, cycles_u, violated_u, fb_mask,
+            engine_label="omnisim-sweep", lock=entry.lock)
+        n_fb = int((fb_mask & (status_u != REUSED)).sum())
+        if n_fb:
+            with self._cv:
+                self.stats_fallbacks += n_fb
+
+        for pos, (req, i) in enumerate(blk.items):
+            if req.cancelled.is_set():
+                continue
+            u = int(inverse[pos])
+            use_fb = req.fallback or status_u[u] == REUSED
+            req.out_q.put(ConfigResult(
+                request_id=req.rid, index=i,
+                depths=tuple(int(d) for d in req.D[i]),
+                ok=bool(status_u[u] == REUSED), status=int(status_u[u]),
+                cycles=int(cycles_u[u]) if use_fb else -1,
+                violated=int(violated_u[u]), reason=reasons_u[u],
+                result=results_u[u] if use_fb else None))
+            req.delivered += 1
+            if req.delivered >= req.K:
+                req.finalized = True
+                req.out_q.put(_DONE)
+        for req, _i in blk.items:
+            if req.cancelled.is_set():
+                self._finalize(req)
+
+    # --------------------------------------------------------------- step
+    def step(self) -> bool:
+        """Assemble, solve and deliver ONE block; False when idle.
+
+        The public unit of progress: the service's background thread calls
+        it in a loop, and deterministic tests drive it directly.  A fault
+        while solving/delivering fails exactly the block's requests (error
+        + terminal sentinel, so no client stream hangs) and re-raises.
+        """
+        blk = self._assemble()
+        if blk is None:
+            return False
+        try:
+            self._deliver(blk)
+        except Exception as exc:
+            msg = f"sweep block failed: {exc!r}"
+            with self._cv:
+                for req, _i in blk.items:
+                    req.error = req.error or msg
+                    self._finalize(req)
+                    for lane in self._lanes.values():
+                        if req in lane:          # rows beyond this block
+                            lane.remove(req)
+            raise
+        return True
+
+    def wait_for_work(self, timeout: float = 0.2) -> None:
+        with self._cv:
+            if self._pick_lane() is None:
+                self._cv.wait(timeout)
+
+    def has_work(self) -> bool:
+        with self._cv:
+            return self._pick_lane() is not None
+
+    def stats(self) -> Dict[str, float]:
+        with self._cv:
+            solved = max(self.stats_rows_unique, 1)
+            return {
+                "requests": self.stats_requests,
+                "blocks": self.stats_blocks,
+                "blocks_interactive": self.stats_blocks_interactive,
+                "blocks_bulk": self.stats_blocks_bulk,
+                "rows": self.stats_rows,
+                "rows_unique": self.stats_rows_unique,
+                "dedup_ratio": (self.stats_rows / solved
+                                if self.stats_rows else 1.0),
+                "fallbacks": self.stats_fallbacks,
+                "cancelled_rows": self.stats_cancelled_rows,
+                "shards": self.shards,
+                "mode": self.mode,
+            }
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None

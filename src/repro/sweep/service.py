@@ -1,0 +1,255 @@
+"""The sweep service front door: submit / stream / stats.
+
+:class:`SweepService` ties the warm cache (``cache.py``) to the
+continuous-batching scheduler (``scheduler.py``) behind a three-call API:
+
+    with SweepService() as svc:
+        handle = svc.submit(program, depths=D)       # non-blocking
+        for cfg in handle.stream():                  # per-config results
+            ...
+        outcome = handle.result()                    # BatchOutcome view
+
+``submit`` resolves the design against the warm cache on the *caller's*
+thread (a cold miss pays the one-off initial simulation + graph hoisting
+there, keeping the scheduler loop hot for everyone else), then enqueues
+the depth matrix.  Requests with at most ``interactive_max`` rows ride
+the interactive priority lane; big sweeps go bulk.  ``sweep()`` is the
+blocking convenience wrapper, ``stream()`` the one-shot iterator.
+
+Every verdict is exactly what a direct ``resimulate_batch`` — and
+therefore a from-scratch ``simulate`` — would report for that depth
+vector; the golden conformance suite (``tests/test_golden.py``) pins this
+bit-for-bit across block splits, shard counts and cache states.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time as _time
+from typing import Dict, Iterator, Optional, Union
+
+import numpy as np
+
+from ..core.dse import BatchOutcome
+from ..core.program import Program, SimResult
+from .cache import GraphCache
+from .scheduler import (BULK, CANCELLED, INTERACTIVE, _DONE, BlockScheduler,
+                        ConfigResult, _Request)
+
+
+class SweepHandle:
+    """Client-side view of one submitted sweep (single consumer)."""
+
+    def __init__(self, request: _Request, scheduler: BlockScheduler):
+        self._req = request
+        self._sched = scheduler
+        self._collected: Dict[int, ConfigResult] = {}
+        self._closed = False
+        self._lock = threading.Lock()
+
+    @property
+    def request_id(self) -> int:
+        return self._req.rid
+
+    @property
+    def n_configs(self) -> int:
+        return self._req.K
+
+    @property
+    def done(self) -> bool:
+        return self._closed
+
+    @property
+    def cancelled(self) -> bool:
+        return self._req.cancelled.is_set()
+
+    def cancel(self) -> None:
+        """Stop scheduling this sweep at the next block boundary.
+
+        Results already streamed stay valid; rows never solved surface as
+        ``CANCELLED`` entries in :meth:`result`.
+        """
+        self._req.cancelled.set()
+        self._sched.kick()
+
+    def stream(self, timeout: Optional[float] = None
+               ) -> Iterator[ConfigResult]:
+        """Yield per-config results as blocks complete (completion order;
+        each :class:`ConfigResult` carries its row ``index``).  Ends when
+        every row was delivered or the request was cancelled; raises
+        ``RuntimeError`` if the scheduler aborted the request (fault or
+        service shutdown)."""
+        while not self._closed:
+            item = self._req.out_q.get(timeout=timeout)
+            if item is _DONE:
+                self._closed = True
+                break
+            self._collected[item.index] = item
+            yield item
+        if self._req.error:        # also on re-entry after a fault
+            raise RuntimeError(self._req.error)
+
+    def result(self, timeout: Optional[float] = None) -> BatchOutcome:
+        """Drain the stream and assemble a :class:`BatchOutcome` indexed
+        like the submitted depth matrix (blocking)."""
+        for _ in self.stream(timeout=timeout):
+            pass
+        K = self._req.K
+        ok = np.zeros(K, dtype=bool)
+        cycles = np.full(K, -1, dtype=np.int64)
+        status = np.full(K, CANCELLED, dtype=np.int8)
+        violated = np.zeros(K, dtype=np.int64)
+        reasons = ["request cancelled before this config was scheduled"] * K
+        results = [None] * K
+        for i, cfg in self._collected.items():
+            ok[i] = cfg.ok
+            cycles[i] = cfg.cycles
+            status[i] = cfg.status
+            violated[i] = cfg.violated
+            reasons[i] = cfg.reason
+            results[i] = cfg.result
+        uniq = (len(np.unique(self._req.D, axis=0))
+                if K > 1 else K)
+        return BatchOutcome(ok=ok, cycles=cycles, status=status,
+                            violated=violated, reasons=reasons,
+                            results=results,
+                            elapsed_s=_time.perf_counter()
+                            - self._req.t_submit, n_unique=uniq)
+
+
+class SweepService:
+    """Served design-space exploration over a warm compiled-graph cache."""
+
+    def __init__(self, cache_capacity: int = 8, block: int = 128,
+                 shards: int = 1, mode: str = "thread",
+                 interactive_max: int = 16, starvation_limit: int = 4,
+                 backend: str = "numpy", autostart: bool = True):
+        self.cache = GraphCache(capacity=cache_capacity)
+        self.scheduler = BlockScheduler(block=block, shards=shards,
+                                        mode=mode,
+                                        starvation_limit=starvation_limit,
+                                        backend=backend)
+        self.interactive_max = interactive_max
+        self._autostart = autostart
+        self._rid = 0
+        self._rid_lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------ runtime
+    def _loop(self) -> None:
+        consec_faults = 0
+        while not self._stop.is_set():
+            try:
+                progressed = self.scheduler.step()
+                consec_faults = 0
+            except Exception as exc:        # noqa: BLE001 — must not die
+                # step() already failed exactly the faulting block's
+                # requests (error + terminal sentinel) — other tenants'
+                # queued sweeps keep being served.  Only a *persistently*
+                # faulting scheduler (e.g. a broken assemble path that
+                # fails before any block exists) aborts everything rather
+                # than spinning hot forever.
+                consec_faults += 1
+                if consec_faults >= 5:
+                    self.scheduler.abort_pending(
+                        f"sweep scheduler failing persistently: {exc!r}")
+                    consec_faults = 0
+                continue
+            if not progressed:
+                self.scheduler.wait_for_work(timeout=0.05)
+
+    def _ensure_thread(self) -> None:
+        if not self._autostart or (self._thread and self._thread.is_alive()):
+            return
+        self._thread = threading.Thread(target=self._loop,
+                                        name="sweep-scheduler", daemon=True)
+        self._thread.start()
+
+    def step(self) -> bool:
+        """Manual-mode progress (``autostart=False``): run one scheduler
+        block on the calling thread.  Deterministic tests drive this."""
+        return self.scheduler.step()
+
+    def close(self) -> None:
+        self._stop.set()
+        self.scheduler.kick()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+        # any sweep still queued gets its terminal sentinel (and an
+        # error) instead of leaving its consumer blocked forever
+        self.scheduler.abort_pending("sweep service closed")
+        self.scheduler.close()
+
+    def __enter__(self) -> "SweepService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------- intake
+    def warm(self, design: Union[Program, SimResult],
+             key: Optional[str] = None):
+        """Pre-populate the cache for ``design`` (cold-start off the
+        request path); returns the warm entry."""
+        return self.cache.get_or_build(design, key=key)
+
+    def submit(self, design: Union[Program, SimResult], depths,
+               key: Optional[str] = None, priority: Optional[str] = None,
+               fallback: bool = True) -> SweepHandle:
+        """Enqueue a sweep of ``depths`` (one row = one candidate depth
+        vector) against ``design`` and return a :class:`SweepHandle`.
+
+        ``design`` is a :class:`Program` or a finished base
+        :class:`SimResult`; repeat designs (by content fingerprint or
+        explicit ``key``) are served from the warm cache.  ``priority``
+        defaults to ``"interactive"`` for at most ``interactive_max`` rows
+        and ``"bulk"`` otherwise.
+        """
+        if self._stop.is_set():
+            raise RuntimeError("sweep service is closed")
+        entry = self.cache.get_or_build(design, key=key)
+        D = np.asarray(depths, dtype=np.int64)
+        if D.ndim == 1:
+            D = D[None, :]
+        if D.ndim != 2 or D.shape[1] != entry.n_fifos:
+            raise ValueError(f"depth matrix {D.shape} does not match "
+                             f"{entry.n_fifos} FIFOs")
+        if priority is None:
+            priority = INTERACTIVE if len(D) <= self.interactive_max else BULK
+        assert priority in (INTERACTIVE, BULK), priority
+        with self._rid_lock:
+            self._rid += 1
+            rid = self._rid
+        req = _Request(rid, entry, D, priority, fallback,
+                       queue.Queue())
+        handle = SweepHandle(req, self.scheduler)
+        if req.K == 0:
+            # an empty sweep completes immediately — it must never reach
+            # the scheduler (a zero-row block would fault the loop)
+            req.finalized = True
+            req.out_q.put(_DONE)
+            return handle
+        self.scheduler.submit(req)
+        self._ensure_thread()
+        return handle
+
+    def stream(self, design: Union[Program, SimResult], depths,
+               **kw) -> Iterator[ConfigResult]:
+        """Submit and iterate per-config results (one-shot convenience)."""
+        return self.submit(design, depths, **kw).stream()
+
+    def sweep(self, design: Union[Program, SimResult], depths,
+              **kw) -> BatchOutcome:
+        """Submit and block for the assembled :class:`BatchOutcome`."""
+        handle = self.submit(design, depths, **kw)
+        if not self._autostart:
+            while self.scheduler.step():
+                pass
+        return handle.result()
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, Dict[str, float]]:
+        return {"cache": self.cache.stats(),
+                "scheduler": self.scheduler.stats()}

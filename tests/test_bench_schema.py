@@ -49,6 +49,12 @@ REQUIRED_KEYS = {
     "query_periodization_sim_generator_us_fig2_timer": numbers.Real,
     "query_periodization_sim_hybrid_us_fig2_timer": numbers.Real,
     "query_periodization_bulk_queries_fig2_timer": numbers.Integral,
+    # PR 5: served DSE sweeps (repro/sweep)
+    "sweep_warm_configs_per_sec": numbers.Real,
+    "sweep_cold_configs_per_sec": numbers.Real,
+    "sweep_service_speedup_vs_loop": numbers.Real,
+    "sweep_dedup_ratio": numbers.Real,
+    "sweep_cache_hit_rate": numbers.Real,
 }
 
 _DOC_KEY = re.compile(r"^\|\s*`([a-z0-9_]+)`\s*\|", re.MULTILINE)

@@ -55,7 +55,7 @@ def test_example_runs(name, tmp_path):
 
 # ------------------------------------------------------------- doc symbols
 DOC_FILES = ["README.md", "docs/architecture.md", "docs/api.md",
-             "docs/dse_guide.md"]
+             "docs/dse_guide.md", "docs/sweep_guide.md"]
 
 _TOKEN = re.compile(r"`([^`\n]+)`")
 _DOTTED = re.compile(r"^repro(\.[A-Za-z_]\w*)+$")

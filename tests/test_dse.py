@@ -188,13 +188,18 @@ def test_batch_speedup_256_configs():
     resimulate(base, tuple(int(d) for d in D[0]))
     resimulate_batch(base, D[:2])
 
-    t0 = time.perf_counter()
-    looped = [resimulate(base, tuple(int(d) for d in row), fallback=False)
-              for row in D]
-    t_loop = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    out_nf = resimulate_batch(base, D, fallback=False)
-    t_batch = time.perf_counter() - t0
+    # best-of-3 on both sides: single-shot wall timings are noisy enough
+    # on shared CI boxes to trip the ratio assertion spuriously
+    t_loop = float("inf")
+    t_batch = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        looped = [resimulate(base, tuple(int(d) for d in row),
+                             fallback=False) for row in D]
+        t_loop = min(t_loop, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        out_nf = resimulate_batch(base, D, fallback=False)
+        t_batch = min(t_batch, time.perf_counter() - t0)
     out = resimulate_batch(base, D)        # untimed: exercises fallback too
 
     # config-for-config agreement with the looped path

@@ -11,7 +11,10 @@ exactly:
                         trace, periodized hybrid, or generator fallback);
   * ``hybrid``        — ``simulate_hybrid(periodize=False)``, per-query;
   * ``periodized``    — ``simulate_hybrid(periodize=True)``, burst path;
-  * ``resimulate`` / ``resimulate_batch`` — the depth-variant record.
+  * ``resimulate`` / ``resimulate_batch`` — the depth-variant record;
+  * ``sweep service`` — ``repro.sweep.SweepService`` over the same depth
+                        variants: bit-identical for any block split,
+                        duplicate rows, arrival order or cache state.
 
 Future refactors therefore cannot silently drift any path.  Intentional
 behavior changes are refreshed with one auditable command (the diff of the
@@ -34,6 +37,7 @@ from repro.designs.paper import PAPER_DESIGNS
 from repro.designs.typea import (fir_filter, high_latency_pipe,
                                  merge_sort_staged, parallel_loops,
                                  producer_consumer, skynet_like)
+from repro.sweep import SweepService
 
 GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           "golden")
@@ -200,6 +204,27 @@ def test_golden_conformance(name, regen_golden):
         out = resimulate_batch(g, D)
         assert int(out.cycles[0]) == vref["cycles"], name
         assert int(out.cycles[1]) == golden["cycles"], name
+
+        # sweep service: duplicate rows, tiny blocks, warm-cache repeat
+        # with reversed arrival order, then a one-block split — all must
+        # reproduce the same reference numbers bit-for-bit
+        D3 = np.asarray([dv, golden["depths"], dv], dtype=np.int64)
+        with SweepService(block=2, shards=2, autostart=False) as svc:
+            s1 = svc.sweep(g, D3)
+            assert int(s1.cycles[0]) == vref["cycles"], name
+            assert int(s1.cycles[1]) == golden["cycles"], name
+            assert int(s1.cycles[2]) == vref["cycles"], name
+            assert _normalize(s1.results[0].outputs) == vref["outputs"], name
+            assert bool(s1.results[0].deadlock) == vref["deadlock"], name
+            assert _normalize(s1.results[1].outputs) == golden["outputs"], \
+                name
+            s2 = svc.sweep(g, D3[::-1])          # warm + reversed arrival
+            assert (s2.cycles == s1.cycles[::-1]).all(), name
+            assert (s2.status == s1.status[::-1]).all(), name
+        with SweepService(block=64, autostart=False) as svc:
+            s3 = svc.sweep(g, D3)                # different block split
+            assert (s3.cycles == s1.cycles).all(), name
+            assert (s3.status == s1.status).all(), name
 
 
 def test_golden_corpus_is_complete():

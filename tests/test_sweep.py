@@ -1,0 +1,580 @@
+"""Sweep-service subsystem (``repro/sweep``, ISSUE 5).
+
+Conformance: every verdict the service streams must be exactly what a
+direct ``resimulate_batch`` — and therefore a from-scratch ``simulate`` —
+reports, for any block split, shard count/mode, arrival order or cache
+state.  Scheduler edge cases (cancellation mid-sweep, priority-lane
+ordering and non-starvation, cross-request coalescing, cache eviction)
+are driven deterministically through manual-mode ``SweepService.step()``
+— no sleeps, no real multi-host.  Process-pool sharding runs under the
+``service`` marker (tier-1 keeps the threaded fallback).
+"""
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import (program_fingerprint, resimulate_batch, simulate)
+from repro.core import dse as dse_mod
+from repro.core.dse import _batch_arrays, solve_block_status
+from repro.core.incremental import compile_graph
+from repro.designs.paper import fig4_ex5
+from repro.designs.typea import producer_consumer, skynet_like
+from repro.sweep import (BULK, CANCELLED, INTERACTIVE, GraphCache,
+                         SweepService, grid_search, pareto_front,
+                         random_search, successive_halving)
+
+
+def _manual_service(**kw):
+    kw.setdefault("autostart", False)
+    return SweepService(**kw)
+
+
+def _assert_outcome_equal(out, ref, note=""):
+    assert (out.ok == ref.ok).all(), note
+    assert (out.status == ref.status).all(), note
+    assert (out.cycles == ref.cycles).all(), note
+    for k in range(len(ref.ok)):
+        if ref.results[k] is not None:
+            assert out.results[k].outputs == ref.results[k].outputs, (note, k)
+            assert out.results[k].deadlock == ref.results[k].deadlock, \
+                (note, k)
+
+
+# ------------------------------------------------------------- conformance
+def test_service_matches_resimulate_batch_mixed_statuses():
+    """fig4_ex5 mixes reuse, constraint flips and fallback re-sims; the
+    served sweep must agree row-for-row under a tiny block size."""
+    base = simulate(fig4_ex5())
+    D = np.array([(2, 100), (100, 2), (2, 2), (1, 1), (64, 64), (2, 100)])
+    ref = resimulate_batch(base, D)
+    with _manual_service(block=2, shards=2) as svc:
+        out = svc.sweep(fig4_ex5(), D)
+    _assert_outcome_equal(out, ref, "fig4_ex5")
+    assert not out.ok[1] and "constraint" in out.reasons[1]
+
+
+def test_service_reports_deadlock_rows():
+    """Configs that starve a committed blocking write must deadlock with
+    the fallback reproducing the full report (as resimulate_batch does)."""
+    builder = lambda: producer_consumer(n=32, depth=4)
+    base = simulate(builder())
+    D = np.array([[8], [1], [2]])
+    ref = resimulate_batch(base, D)
+    with _manual_service(block=1) as svc:
+        out = svc.sweep(builder(), D)
+    _assert_outcome_equal(out, ref, "producer_consumer")
+
+
+def test_service_block_split_and_arrival_order_invariant():
+    builder = lambda: skynet_like(items=48, depth=6)
+    base = simulate(builder())
+    rng = np.random.default_rng(7)
+    D = rng.integers(1, 13, size=(24, len(base.depths)))
+    ref = resimulate_batch(base, D)
+    for block, shards in ((1, 1), (5, 3), (64, 1)):
+        with _manual_service(block=block, shards=shards) as svc:
+            out = svc.sweep(builder(), D)
+            _assert_outcome_equal(out, ref, f"block={block}")
+            # warm cache + reversed arrival order: still bit-identical
+            out2 = svc.sweep(builder(), D[::-1])
+            assert (out2.cycles == ref.cycles[::-1]).all()
+            assert (out2.status == ref.status[::-1]).all()
+
+
+def test_shard_modes_bit_identical():
+    builder = lambda: skynet_like(items=48, depth=6)
+    rng = np.random.default_rng(3)
+    D = rng.integers(2, 13, size=(32, len(builder().fifos)))
+    outs = []
+    for shards in (1, 4):
+        with _manual_service(block=16, shards=shards,
+                             mode="thread") as svc:
+            outs.append(svc.sweep(builder(), D))
+    assert (outs[0].cycles == outs[1].cycles).all()
+    assert (outs[0].status == outs[1].status).all()
+
+
+@pytest.mark.service
+def test_process_shard_mode_bit_identical():
+    """mode="process": workers hold their own unpickled CompiledGraph."""
+    builder = lambda: skynet_like(items=48, depth=6)
+    rng = np.random.default_rng(3)
+    D = rng.integers(2, 13, size=(32, len(builder().fifos)))
+    with _manual_service(block=16, shards=1) as svc:
+        ref = svc.sweep(builder(), D)
+    with _manual_service(block=16, shards=2, mode="process") as svc:
+        out = svc.sweep(builder(), D)
+    assert (out.cycles == ref.cycles).all()
+    assert (out.status == ref.status).all()
+
+
+def test_streaming_is_per_config():
+    """stream() yields one ConfigResult per row (indices complete), usable
+    before the assembled outcome."""
+    builder = lambda: producer_consumer(n=32, depth=2)
+    D = np.array([[d] for d in (1, 2, 4, 8, 16)])
+    with SweepService(block=2) as svc:
+        seen = {}
+        for cfg in svc.stream(builder(), D):
+            seen[cfg.index] = cfg
+        assert sorted(seen) == list(range(len(D)))
+        for k, cfg in seen.items():
+            full = simulate(builder(), depths=(int(D[k, 0]),))
+            assert cfg.cycles == full.cycles
+
+
+# ---------------------------------------------------------------- scheduler
+def test_cancellation_mid_sweep():
+    """Cancel after one block: delivered rows stay exact, the stream
+    terminates, undelivered rows surface as CANCELLED."""
+    builder = lambda: skynet_like(items=48, depth=6)
+    base = simulate(builder())
+    rng = np.random.default_rng(0)
+    D = rng.integers(4, 13, size=(30, len(base.depths)))
+    ref = resimulate_batch(base, D)
+    with _manual_service(block=10) as svc:
+        h = svc.submit(builder(), D, priority=BULK)
+        assert svc.step()                    # block 1: rows 0..9
+        h.cancel()
+        svc.step()                           # reaps + finalizes
+        out = h.result()
+    assert (out.cycles[:10] == ref.cycles[:10]).all()
+    assert (out.status[:10] == ref.status[:10]).all()
+    assert (out.status[10:] == CANCELLED).all()
+    assert (out.cycles[10:] == -1).all()
+    assert h.done and h.cancelled
+    st = svc.scheduler.stats()
+    assert st["cancelled_rows"] == 20 and st["rows"] == 10
+
+
+def test_priority_lane_preempts_bulk():
+    """An interactive query submitted behind a long bulk sweep is served
+    in the very next block."""
+    bulk_b = lambda: skynet_like(items=48, depth=6)
+    inter_b = lambda: producer_consumer(n=32, depth=2)
+    Db = np.full((40, len(bulk_b().fifos)), 8, dtype=np.int64)
+    Db += np.arange(40)[:, None] % 5         # distinct rows
+    with _manual_service(block=8) as svc:
+        hb = svc.submit(bulk_b(), Db, priority=BULK)
+        svc.step()                           # bulk gets one block first
+        hi = svc.submit(inter_b(), np.array([[2], [4]]))
+        assert hi._req.priority == INTERACTIVE      # auto-assigned
+        svc.step()                           # must serve interactive next
+        assert hi._req.delivered == 2 and hi.done is False
+        assert hb._req.delivered == 8        # bulk has NOT advanced
+        while svc.step():
+            pass
+        assert hi.result().ok.all()
+        assert hb.result().cycles.min() >= 0
+
+
+def test_bulk_not_starved_by_interactive_flood():
+    """After starvation_limit consecutive interactive blocks, one bulk
+    block is forced through."""
+    inter_b = lambda: producer_consumer(n=32, depth=2)
+    bulk_b = lambda: skynet_like(items=48, depth=6)
+    Db = np.full((32, len(bulk_b().fifos)), 8, dtype=np.int64)
+    with _manual_service(block=4, starvation_limit=2) as svc:
+        hb = svc.submit(bulk_b(), Db, priority=BULK)
+        his = [svc.submit(inter_b(), np.array([[d], [d + 1]]))
+               for d in range(1, 7)]
+        for _ in range(3):
+            svc.step()
+        st = svc.scheduler.stats()
+        assert st["blocks_interactive"] == 2 and st["blocks_bulk"] == 1
+        assert hb._req.delivered > 0
+        while svc.step():
+            pass
+        assert all(h.result().cycles.min() >= 0 for h in his)
+
+
+def test_starvation_debt_resets_when_bulk_lane_empty():
+    """Interactive blocks served while NO bulk waits must not bank
+    starvation debt that lets a later bulk sweep preempt the lane."""
+    inter_b = lambda: producer_consumer(n=32, depth=2)
+    bulk_b = lambda: skynet_like(items=48, depth=6)
+    with _manual_service(block=4, starvation_limit=1) as svc:
+        for d in (1, 2, 3):              # 3 interactive blocks, bulk empty
+            svc.submit(inter_b(), np.array([[d]]))
+            svc.step()
+        Db = np.full((16, len(bulk_b().fifos)), 8, dtype=np.int64)
+        svc.submit(bulk_b(), Db, priority=BULK)
+        hi = svc.submit(inter_b(), np.array([[4]]))
+        svc.step()                       # interactive still goes first
+        assert hi._req.delivered == 1
+        while svc.step():
+            pass
+
+
+def test_coalescing_and_block_dedup_across_requests():
+    """Two tenants sweeping the same design share blocks, and identical
+    rows across them are solved once."""
+    builder = lambda: producer_consumer(n=32, depth=2)
+    D1 = np.array([[1], [2], [4]])
+    D2 = np.array([[2], [4], [8]])           # overlaps D1 on {2, 4}
+    with _manual_service(block=16) as svc:
+        h1 = svc.submit(builder(), D1, priority=BULK)
+        h2 = svc.submit(builder(), D2, priority=BULK)
+        assert svc.step() and not svc.step()     # ONE coalesced block
+        st = svc.scheduler.stats()
+        assert st["blocks"] == 1
+        assert st["rows"] == 6 and st["rows_unique"] == 4
+        o1, o2 = h1.result(), h2.result()
+    for out, D in ((o1, D1), (o2, D2)):
+        for k in range(len(D)):
+            full = simulate(builder(), depths=(int(D[k, 0]),))
+            assert out.cycles[k] == full.cycles
+
+
+def test_cancel_mid_queue_finalizes_promptly():
+    """A cancelled request buried behind a long bulk queue must get its
+    terminal sentinel at the next scheduling point, not after the queue
+    ahead of it drains."""
+    builder = lambda: skynet_like(items=48, depth=6)
+    Da = np.full((40, len(builder().fifos)), 8, dtype=np.int64)
+    Da += np.arange(40)[:, None] % 5
+    with _manual_service(block=4) as svc:
+        ha = svc.submit(builder(), Da, priority=BULK)
+        hb = svc.submit(builder(), np.full((2, Da.shape[1]), 9), priority=BULK)
+        hb.cancel()
+        svc.step()                       # one block of A; B reaped here
+        assert hb._req.finalized
+        out = hb.result()                # returns immediately, no drain of A
+        assert (out.status == CANCELLED).all()
+        assert not ha.done
+
+
+def test_empty_depth_matrix_completes_immediately():
+    builder = lambda: producer_consumer(n=32, depth=2)
+    with _manual_service(block=8) as svc:
+        h = svc.submit(builder(), np.zeros((0, 1), dtype=np.int64))
+        out = h.result()
+        assert len(out.ok) == 0 and h.done
+        assert not svc.step()            # nothing ever reached the lanes
+
+
+def test_scheduler_fault_fails_requests_loudly():
+    """A faulting block must not wedge clients: queued requests get their
+    sentinel and result()/stream() raise instead of hanging forever."""
+    builder = lambda: producer_consumer(n=32, depth=2)
+    with SweepService(block=4) as svc:
+        def boom(entry, Du):
+            raise RuntimeError("injected solver fault")
+
+        svc.scheduler._solve_unique = boom
+        h = svc.submit(builder(), np.array([[2], [4]]))
+        with pytest.raises(RuntimeError, match="injected solver fault"):
+            h.result(timeout=10.0)
+        # a later result() must re-raise, not fabricate a CANCELLED outcome
+        with pytest.raises(RuntimeError, match="injected solver fault"):
+            h.result(timeout=10.0)
+
+
+def test_close_aborts_pending_requests():
+    builder = lambda: producer_consumer(n=32, depth=2)
+    svc = _manual_service(block=4)
+    h = svc.submit(builder(), np.array([[2], [4]]))
+    svc.close()                          # never stepped
+    with pytest.raises(RuntimeError, match="service closed"):
+        h.result()
+    # and a closed service refuses new work instead of enqueuing it into
+    # a loop that will never run
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(builder(), np.array([[2]]))
+
+
+def test_cancelled_rows_skip_fallback_work(monkeypatch):
+    """Rows owned only by a cancelled request must not pay for fallback
+    re-simulations nobody will receive (cancel landing mid-solve)."""
+    builder = lambda: producer_consumer(n=32, depth=4)
+    sim_calls = []
+    real_sim = dse_mod.simulate
+
+    def counting_sim(program, **kw):
+        sim_calls.append(kw.get("depths"))
+        return real_sim(program, **kw)
+
+    monkeypatch.setattr(dse_mod, "simulate", counting_sim)
+    with _manual_service(block=8) as svc:
+        # depth 1 deadlocks (leftover items) -> would need a fallback sim
+        h = svc.submit(builder(), np.array([[1], [8]]), priority=BULK)
+        blk = svc.scheduler._assemble()
+        h.cancel()                       # lands while the block is in flight
+        svc.scheduler._deliver(blk)
+        assert sim_calls == []           # no engine work for a dead stream
+        assert h._req.finalized
+
+
+# -------------------------------------------------------------------- cache
+def test_cache_hit_miss_eviction_stats():
+    calls = []
+
+    def counting_sim(program, **kw):
+        calls.append(program.name)
+        return simulate(program, **kw)
+
+    cache = GraphCache(capacity=1)
+    e1 = cache.get_or_build(producer_consumer(n=32, depth=2),
+                            simulate_fn=counting_sim)
+    # warm repeat: same content fingerprint, no new simulation
+    e1b = cache.get_or_build(producer_consumer(n=32, depth=2),
+                             simulate_fn=counting_sim)
+    assert e1 is e1b and len(calls) == 1
+    # different design evicts (capacity 1) ...
+    cache.get_or_build(skynet_like(items=24, depth=4),
+                       simulate_fn=counting_sim)
+    st = cache.stats()
+    assert st["evictions"] == 1 and st["size"] == 1
+    # ... so the first design must rebuild
+    cache.get_or_build(producer_consumer(n=32, depth=2),
+                       simulate_fn=counting_sim)
+    assert len(calls) == 3
+    st = cache.stats()
+    assert st["hits"] == 1 and st["misses"] == 3
+    assert st["hit_rate"] == pytest.approx(0.25)
+
+
+def test_cache_content_addressing():
+    """Same builder + same args ⇒ same key; changing an argument that a
+    module closure captures changes the key."""
+    k1 = program_fingerprint(producer_consumer(n=32, depth=2))
+    k2 = program_fingerprint(producer_consumer(n=32, depth=2))
+    k3 = program_fingerprint(producer_consumer(n=48, depth=2))
+    assert k1 == k2 and k1 != k3
+
+
+def _closure_design(captured):
+    from repro.core.program import Emit, Program, Read, Write
+
+    prog = Program("closure_design", declared_type="A")
+    d = prog.fifo("d", 2)
+
+    @prog.module("p")
+    def p():
+        for i in range(4):
+            yield Write(d, i)
+
+    @prog.module("c")
+    def c():
+        tot = 0
+        for _ in range(4):
+            tot += (yield Read(d))
+        yield Emit("sum", tot + (captured is not None))
+
+    return prog
+
+
+def test_fingerprint_closure_edge_cases():
+    """Captured values must hash by CONTENT: deeply nested data beyond
+    the recursion bound still distinguishes designs (never a false cache
+    hit), and default-repr objects hash stably (never a guaranteed
+    miss)."""
+    def nest(v, levels=12):
+        for _ in range(levels):
+            v = [v]
+        return v
+
+    deep1 = program_fingerprint(_closure_design(nest(1)))
+    deep2 = program_fingerprint(_closure_design(nest(2)))
+    assert deep1 != deep2                # differs only below the bound
+
+    class Cfg:                           # default object.__repr__
+        def __init__(self, x):
+            self.x = x
+
+    a1 = program_fingerprint(_closure_design(Cfg(1)))
+    a2 = program_fingerprint(_closure_design(Cfg(1)))
+    b = program_fingerprint(_closure_design(Cfg(2)))
+    assert a1 == a2                      # stable across instances
+    assert a1 != b                       # but content-sensitive
+
+
+def test_fingerprint_kwonly_defaults_and_globals():
+    """Design identity that lives in __kwdefaults__ or module globals
+    (not consts/closures) must still change the key."""
+    from repro.core.program import Emit, Program
+
+    def build(count):
+        prog = Program("kwonly", declared_type="A")
+
+        def gen(*, n=count):
+            yield Emit("n", n)
+
+        prog.add_module("m", gen)
+        return prog
+
+    assert program_fingerprint(build(3)) == program_fingerprint(build(3))
+    assert program_fingerprint(build(3)) != program_fingerprint(build(7))
+
+    glob = {"Emit": __import__("repro.core.program",
+                               fromlist=["Emit"]).Emit, "N": 3}
+    src = "def gen():\n    yield Emit('n', N)\n"
+
+    def build_global(n):
+        from repro.core.program import Program
+        g = dict(glob, N=n)
+        exec(src, g)
+        prog = Program("globdesign", declared_type="A")
+        prog.add_module("m", g["gen"])
+        return prog
+
+    assert (program_fingerprint(build_global(3))
+            == program_fingerprint(build_global(3)))
+    assert (program_fingerprint(build_global(3))
+            != program_fingerprint(build_global(7)))
+
+    # a global read only inside a nested lambda still counts
+    src_nested = "def gen():\n    f = lambda: N\n    yield Emit('n', f())\n"
+
+    def build_nested(n):
+        from repro.core.program import Program
+        g = dict(glob, N=n)
+        exec(src_nested, g)
+        prog = Program("nestedglob", declared_type="A")
+        prog.add_module("m", g["gen"])
+        return prog
+
+    assert (program_fingerprint(build_nested(3))
+            != program_fingerprint(build_nested(7)))
+
+    # container TYPE is content: (4, 8) and [4, 8] must not collide
+    assert (program_fingerprint(_closure_design((4, 8)))
+            != program_fingerprint(_closure_design([4, 8])))
+
+
+def test_successive_halving_memoizes_survivors():
+    """Each round submits only never-seen configs: total rows solved by
+    the service is strictly less than population x rounds."""
+    builder = lambda: producer_consumer(n=24, depth=2)
+    with _manual_service(block=32) as svc:
+        out = successive_halving(svc, builder(), n0=8, rounds=3, eta=2,
+                                 lo=1, hi=8, seed=3)
+        rows = svc.scheduler.stats()["rows"]
+    assert rows == len(out.depths) < 8 * 3
+
+
+def test_cache_accepts_existing_base_result():
+    base = simulate(producer_consumer(n=32, depth=2))
+    cache = GraphCache()
+    entry = cache.get_or_build(base)
+    assert entry.result is base
+    assert entry.graph is compile_graph(base.graph)
+
+
+# ------------------------------------------------------------ picklability
+def test_compiled_graph_and_batch_arrays_pickle():
+    """Worker-process sharding ships CompiledGraph (and its lazily rebuilt
+    _BatchArrays view) over pickle; solves must survive the round trip."""
+    base = simulate(skynet_like(items=48, depth=6))
+    graph = compile_graph(base.graph)
+    ba = _batch_arrays(graph)
+    ba2 = pickle.loads(pickle.dumps(ba))
+    assert (ba2.perm == ba.perm).all() and ba2.bound == ba.bound
+    rng = np.random.default_rng(5)
+    D = rng.integers(2, 13, size=(8, len(base.depths)))
+    s_ref, c_ref, v_ref, _ = solve_block_status(graph, D)
+    g2 = pickle.loads(pickle.dumps(graph))
+    s2, c2, v2, _ = solve_block_status(g2, D)
+    assert (s2 == s_ref).all() and (c2 == c_ref).all() \
+        and (v2 == v_ref).all()
+
+
+# ------------------------------------------------------------------ search
+def test_pareto_front_dominance():
+    D = np.array([[1, 1], [2, 2], [3, 3], [4, 4], [2, 1]])
+    C = np.array([100, 50, 50, 40, 60])
+    front = pareto_front(D, C)
+    assert front == [((1, 1), 2, 100), ((2, 1), 3, 60), ((2, 2), 4, 50),
+                     ((4, 4), 8, 40)]
+    # infeasible rows never enter
+    feas = np.array([True, True, True, False, True])
+    assert all(a != 8 for _d, a, _c in pareto_front(D, C, feas))
+
+
+def test_grid_search_modes_and_exactness():
+    builder = lambda: producer_consumer(n=32, depth=2)
+    with _manual_service(block=8) as svc:
+        uni = grid_search(svc, builder(), [1, 2, 4, 8])
+        assert len(uni.depths) == 4 and uni.feasible.all()
+        for row, cyc in zip(uni.depths, uni.cycles):
+            assert simulate(builder(),
+                            depths=tuple(int(x) for x in row)).cycles == cyc
+        axes = grid_search(svc, builder(), [1, 4], mode="axes")
+        assert len(axes.depths) == 1 + len(builder().fifos) * 2
+        prod = grid_search(svc, builder(), [1, 2], mode="product")
+        assert len(prod.depths) == 2
+        with pytest.raises(ValueError):
+            grid_search(svc, skynet_like(items=24, depth=4),
+                        list(range(9)), mode="product", limit=10)
+
+
+def test_random_search_finds_brute_force_best():
+    builder = lambda: producer_consumer(n=24, depth=2)
+    with _manual_service(block=16) as svc:
+        out = random_search(svc, builder(), n=24, lo=1, hi=8, seed=2)
+    base = simulate(builder())
+    ref = resimulate_batch(base, out.depths)
+    feas = ref.cycles >= 0
+    assert out.best[1] == int(ref.cycles[feas].min())
+    assert len(out.pareto) >= 1
+
+
+def test_successive_halving_reduces_area():
+    builder = lambda: skynet_like(items=24, depth=4)
+    with _manual_service(block=32) as svc:
+        out = successive_halving(svc, builder(), n0=8, rounds=3, eta=2,
+                                 lo=1, hi=12, seed=4)
+    assert out.rounds == 3 and out.feasible.any()
+    # the frontier's cheapest point must undercut the cheapest round-0
+    # feasible candidate (halving explored toward lower area)
+    n0_area = out.depths[:8][out.feasible[:8]].sum(axis=1)
+    assert out.pareto[0][1] <= int(n0_area.min())
+    # every frontier point is exact
+    for dv, _area, cyc in out.pareto:
+        assert simulate(builder(), depths=dv).cycles == cyc
+
+
+# ------------------------------------------------------- dse-level dedup
+def test_resimulate_batch_dedups_solver_work(monkeypatch):
+    """Satellite: identical depth rows are solved once — solver work (and
+    fallback re-simulation) scales with UNIQUE configs."""
+    builder = lambda: producer_consumer(n=32, depth=4)
+    base = simulate(builder())
+    rows_seen = []
+    real_solve = dse_mod._solve_block_numpy
+
+    def counting_solve(ba, Db):
+        rows_seen.append(len(Db))
+        return real_solve(ba, Db)
+
+    monkeypatch.setattr(dse_mod, "_solve_block_numpy", counting_solve)
+    D = np.array([[1], [8], [1], [8], [1], [8], [1], [8]])
+    out = resimulate_batch(base, D)
+    assert out.n_unique == 2 and sum(rows_seen) == 2
+    # duplicates share one result object and identical verdicts
+    assert out.results[0] is out.results[2] is out.results[4]
+    assert out.cycles[1] == out.cycles[3] == out.cycles[5]
+    ref = resimulate_batch(base, D, dedup=False)
+    assert sum(rows_seen) == 2 + len(D)          # dedup=False solves all
+    assert (ref.cycles == out.cycles).all()
+    assert (ref.status == out.status).all()
+
+
+def test_resimulate_batch_dedups_fallbacks(monkeypatch):
+    """A duplicated violating config pays for ONE full re-simulation."""
+    base = simulate(fig4_ex5())
+    sim_calls = []
+    real_sim = dse_mod.simulate
+
+    def counting_sim(program, **kw):
+        sim_calls.append(kw.get("depths"))
+        return real_sim(program, **kw)
+
+    monkeypatch.setattr(dse_mod, "simulate", counting_sim)
+    D = np.array([(100, 2)] * 6 + [(2, 100)])
+    out = resimulate_batch(base, D)
+    assert not out.ok[0] and out.ok[6]
+    assert len(sim_calls) == 1                   # one fallback for 6 rows
+    full = simulate(fig4_ex5(), depths=(100, 2))
+    assert (out.cycles[:6] == full.cycles).all()

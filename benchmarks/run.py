@@ -31,7 +31,8 @@ def main(quick: bool = False, out: str = None) -> None:
                                    table5_vs_decoupled, table6_batch_dse,
                                    table6_incremental, table_hybrid_replay,
                                    table_query_periodization,
-                                   table_sweep_service, table_trace_replay)
+                                   table_sweep_faults, table_sweep_service,
+                                   table_trace_replay)
     rows = []
     if not quick:
         rows += table3_funcsim()
@@ -41,6 +42,7 @@ def main(quick: bool = False, out: str = None) -> None:
         rows += table6_incremental()
     rows += table6_batch_dse()
     rows += table_sweep_service()
+    rows += table_sweep_faults()
     rows += table_trace_replay()
     rows += table_hybrid_replay()
     rows += table_query_periodization()

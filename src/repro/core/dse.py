@@ -53,8 +53,14 @@ from .graph import longest_path_chains, longest_path_chains_batched
 from .incremental import NEGI, CompiledGraph, compile_graph
 from .program import SimResult
 
-# per-config status codes
+# per-config status codes.  The first four are solver verdicts (what
+# ``solve_block_status`` classifies); the last four are *service-level*
+# terminal statuses used by the sweep subsystem (``repro/sweep``) so that
+# every submitted row ends in a definite state even when it was never
+# solved: cancelled by the client, failed by a faulting shard after
+# retries, expired past its deadline, or shed by admission control.
 REUSED, DEADLOCK, CYCLE, VIOLATED = 0, 1, 2, 3
+CANCELLED, FAULTED, TIMED_OUT, REJECTED = 4, 5, 6, 7
 
 # Per-Program re-entrant locks serializing every transient in-place
 # mutation (the fallback re-simulation sets FIFO depths and restores
@@ -77,7 +83,16 @@ def program_mutation_lock(program) -> threading.RLock:
 _STATUS_REASON = {
     REUSED: "constraints satisfied",
     CYCLE: "regenerated WAR edges create a cycle (event order invalid)",
+    CANCELLED: "request cancelled before this config was scheduled",
+    FAULTED: "shard solve faulted repeatedly (retries exhausted)",
+    TIMED_OUT: "deadline exceeded before this config was solved",
+    REJECTED: "rejected by admission control",
 }
+
+# statuses the exact engine fallback applies to: solver verdicts that a
+# full re-simulation can refine.  Service-level terminal statuses
+# (CANCELLED/FAULTED/TIMED_OUT/REJECTED) must never pay for engine work.
+FALLBACK_STATUSES = (DEADLOCK, CYCLE, VIOLATED)
 
 
 @dataclass
@@ -563,10 +578,8 @@ def status_reason(cache: CompiledGraph, status_k: int, violated_k: int,
                   fifo_names: Optional[List[str]] = None) -> str:
     """Human-readable verdict for one config of :func:`solve_block_status`
     (exactly the strings :func:`resimulate_batch` reports)."""
-    if status_k == REUSED:
-        return _STATUS_REASON[REUSED]
-    if status_k == CYCLE:
-        return _STATUS_REASON[CYCLE]
+    if status_k in _STATUS_REASON:
+        return _STATUS_REASON[status_k]
     if status_k == DEADLOCK:
         ba = _batch_arrays(cache)
         fid = int(np.flatnonzero(depths_row < ba.fifo_need)[0])
@@ -608,7 +621,7 @@ def materialize_block(result: SimResult, Du: np.ndarray,
                 stats=result.stats, graph=engine,
                 constraints=result.constraints,
                 depths=tuple(int(d) for d in Du[u]))
-        elif fallback_mask[u]:
+        elif fallback_mask[u] and status_u[u] in FALLBACK_STATUSES:
             with (lock if lock is not None else nullcontext()), \
                     program_mutation_lock(engine.program):
                 saved = engine.program.depths()

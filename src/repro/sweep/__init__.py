@@ -9,24 +9,36 @@ single-host library call — into a multi-tenant workload (the ROADMAP's
     ``(SimResult, CompiledGraph, _BatchArrays)`` design entries;
   * :mod:`repro.sweep.scheduler` — continuous batching: cross-tenant
     block coalescing, in-block dedup, worker sharding, per-config
-    streaming, cancellation, priority lanes;
+    streaming, cancellation, priority lanes, per-shard retry/timeout,
+    pool respawn, end-to-end deadlines;
+  * :mod:`repro.sweep.faults`    — deterministic fault injection
+    (``FaultInjector``), ``RetryPolicy``, and the per-design
+    ``DesignQuarantine`` circuit breaker;
+  * :mod:`repro.sweep.admission` — per-tenant quotas and load shedding
+    (``AdmissionController``);
   * :mod:`repro.sweep.service`   — the front door
     (``SweepService.submit/stream/sweep/stats``);
   * :mod:`repro.sweep.search`    — grid / random / successive-halving
     drivers producing (FIFO area, latency) Pareto frontiers.
 
-See ``docs/sweep_guide.md`` for the walkthrough.
+See ``docs/sweep_guide.md`` for the walkthrough (including "Operating
+under faults").
 """
+from ..core.dse import CANCELLED, FAULTED, REJECTED, TIMED_OUT
+from .admission import DEFAULT_TENANT, AdmissionController
 from .cache import CacheEntry, GraphCache
-from .scheduler import (BULK, CANCELLED, INTERACTIVE, BlockScheduler,
-                        ConfigResult)
+from .faults import (DesignQuarantine, FaultInjector, InjectedFault,
+                     RetryPolicy)
+from .scheduler import BULK, INTERACTIVE, BlockScheduler, ConfigResult
 from .search import (SearchOutcome, grid_search, pareto_front,
                      random_search, successive_halving)
-from .service import SweepHandle, SweepService
+from .service import SweepHandle, SweepService, SweepTimeoutError
 
 __all__ = [
-    "BlockScheduler", "BULK", "CacheEntry", "CANCELLED", "ConfigResult",
-    "GraphCache", "grid_search", "INTERACTIVE", "pareto_front",
-    "random_search", "SearchOutcome", "successive_halving", "SweepHandle",
-    "SweepService",
+    "AdmissionController", "BlockScheduler", "BULK", "CacheEntry",
+    "CANCELLED", "ConfigResult", "DEFAULT_TENANT", "DesignQuarantine",
+    "FAULTED", "FaultInjector", "GraphCache", "grid_search",
+    "InjectedFault", "INTERACTIVE", "pareto_front", "random_search",
+    "REJECTED", "RetryPolicy", "SearchOutcome", "successive_halving",
+    "SweepHandle", "SweepService", "SweepTimeoutError", "TIMED_OUT",
 ]

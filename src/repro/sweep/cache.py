@@ -79,7 +79,10 @@ class CacheEntry:
         Serialized *without* the ``batch`` view: workers rebuild it once
         from the arrays (cheap) and then keep their own warm copy, which
         avoids shipping the no-WAR seed and WAR column cache over the
-        pipe on every design change.
+        pipe on every design change.  The scheduler hands this blob to
+        process-pool *initializers* (and to need-blob reship round
+        trips), so steady-state tasks, retries and pool respawns ship
+        only the design key — never the serialized graph.
         """
         if self._graph_blob is None:
             batch = self.graph.batch

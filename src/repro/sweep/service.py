@@ -16,10 +16,25 @@ the depth matrix.  Requests with at most ``interactive_max`` rows ride
 the interactive priority lane; big sweeps go bulk.  ``sweep()`` is the
 blocking convenience wrapper, ``stream()`` the one-shot iterator.
 
-Every verdict is exactly what a direct ``resimulate_batch`` — and
-therefore a from-scratch ``simulate`` — would report for that depth
-vector; the golden conformance suite (``tests/test_golden.py``) pins this
-bit-for-bit across block splits, shard counts and cache states.
+Fault tolerance (ISSUE 6): ``submit`` takes a ``tenant`` and an optional
+``deadline_s`` — the deadline is enforced end-to-end by the scheduler
+(undelivered rows of an expired request terminate ``TIMED_OUT``, never
+hang).  Before a request touches the cache, the service checks the
+design's :class:`~repro.sweep.faults.DesignQuarantine` (a poisoned design
+is refused fast) and the :class:`~repro.sweep.admission.AdmissionController`
+(per-tenant in-flight row quotas + queue-depth load shedding); a refused
+request returns a handle whose every row is ``REJECTED`` with a reason —
+a definite verdict, not an exception and not a stuck stream.  Admission
+reservations are released when the request's stream finishes for *any*
+reason (delivered, cancelled, faulted, timed out).  ``close(drain=True)``
+flushes in-flight sweeps before shutting down and fails never-scheduled
+ones loudly.
+
+Every verdict that IS delivered is exactly what a direct
+``resimulate_batch`` — and therefore a from-scratch ``simulate`` — would
+report for that depth vector; the golden conformance suite
+(``tests/test_golden.py``) pins this bit-for-bit across block splits,
+shard counts, cache states and injected faults.
 """
 from __future__ import annotations
 
@@ -30,11 +45,32 @@ from typing import Dict, Iterator, Optional, Union
 
 import numpy as np
 
-from ..core.dse import BatchOutcome
+from ..core.dse import (CANCELLED, REJECTED, BatchOutcome,
+                        program_mutation_lock)
 from ..core.program import Program, SimResult
+from ..core.trace import program_fingerprint
+from .admission import DEFAULT_TENANT, AdmissionController
 from .cache import GraphCache
-from .scheduler import (BULK, CANCELLED, INTERACTIVE, _DONE, BlockScheduler,
+from .faults import DesignQuarantine, FaultInjector, RetryPolicy
+from .scheduler import (BULK, INTERACTIVE, _DONE, BlockScheduler,
                         ConfigResult, _Request)
+
+
+class SweepTimeoutError(TimeoutError):
+    """``SweepHandle.stream/result(timeout=...)`` saw no result within
+    ``timeout`` seconds.  The handle stays live: call ``stream()`` or
+    ``result()`` again to keep consuming from where it stopped."""
+
+    def __init__(self, request_id: int, delivered: int, total: int,
+                 timeout: float):
+        super().__init__(
+            f"sweep request {request_id}: no result within {timeout:.6g}s "
+            f"({delivered}/{total} configs delivered so far; the handle "
+            f"is still live — call stream()/result() again to resume)")
+        self.request_id = request_id
+        self.delivered = delivered
+        self.total = total
+        self.timeout = timeout
 
 
 class SweepHandle:
@@ -63,6 +99,16 @@ class SweepHandle:
     def cancelled(self) -> bool:
         return self._req.cancelled.is_set()
 
+    @property
+    def rejected(self) -> bool:
+        """True when admission control or quarantine refused this sweep
+        (every row reports ``REJECTED`` with the reason)."""
+        return self._req.reject_reason is not None
+
+    @property
+    def tenant(self) -> str:
+        return self._req.tenant
+
     def cancel(self) -> None:
         """Stop scheduling this sweep at the next block boundary.
 
@@ -78,9 +124,15 @@ class SweepHandle:
         each :class:`ConfigResult` carries its row ``index``).  Ends when
         every row was delivered or the request was cancelled; raises
         ``RuntimeError`` if the scheduler aborted the request (fault or
-        service shutdown)."""
+        service shutdown), and :class:`SweepTimeoutError` if ``timeout``
+        seconds pass without a result (the handle stays resumable)."""
         while not self._closed:
-            item = self._req.out_q.get(timeout=timeout)
+            try:
+                item = self._req.out_q.get(timeout=timeout)
+            except queue.Empty:
+                raise SweepTimeoutError(
+                    self._req.rid, len(self._collected), self._req.K,
+                    timeout if timeout is not None else 0.0) from None
             if item is _DONE:
                 self._closed = True
                 break
@@ -97,9 +149,14 @@ class SweepHandle:
         K = self._req.K
         ok = np.zeros(K, dtype=bool)
         cycles = np.full(K, -1, dtype=np.int64)
-        status = np.full(K, CANCELLED, dtype=np.int8)
         violated = np.zeros(K, dtype=np.int64)
-        reasons = ["request cancelled before this config was scheduled"] * K
+        if self._req.reject_reason is not None:
+            status = np.full(K, REJECTED, dtype=np.int8)
+            reasons = [self._req.reject_reason] * K
+        else:
+            status = np.full(K, CANCELLED, dtype=np.int8)
+            reasons = ["request cancelled before this config was "
+                       "scheduled"] * K
         results = [None] * K
         for i, cfg in self._collected.items():
             ok[i] = cfg.ok
@@ -123,13 +180,35 @@ class SweepService:
     def __init__(self, cache_capacity: int = 8, block: int = 128,
                  shards: int = 1, mode: str = "thread",
                  interactive_max: int = 16, starvation_limit: int = 4,
-                 backend: str = "numpy", autostart: bool = True):
+                 backend: str = "numpy", autostart: bool = True,
+                 min_shard_rows: int = 8,
+                 retry: Optional[RetryPolicy] = None,
+                 injector: Optional[FaultInjector] = None,
+                 shard_timeout_s: Optional[float] = 30.0,
+                 quarantine_after: int = 3,
+                 quarantine_cooldown_s: Optional[float] = None,
+                 max_pool_respawns: int = 2,
+                 max_inflight_rows_per_tenant: Optional[int] = None,
+                 max_queued_rows: Optional[int] = None,
+                 default_deadline_s: Optional[float] = None):
         self.cache = GraphCache(capacity=cache_capacity)
+        quarantine = DesignQuarantine(threshold=quarantine_after,
+                                      cooldown_s=quarantine_cooldown_s)
         self.scheduler = BlockScheduler(block=block, shards=shards,
                                         mode=mode,
                                         starvation_limit=starvation_limit,
-                                        backend=backend)
+                                        backend=backend,
+                                        min_shard_rows=min_shard_rows,
+                                        retry=retry, injector=injector,
+                                        shard_timeout_s=shard_timeout_s,
+                                        quarantine=quarantine,
+                                        max_pool_respawns=max_pool_respawns)
+        self.admission = AdmissionController(
+            max_inflight_rows_per_tenant=max_inflight_rows_per_tenant,
+            max_queued_rows=max_queued_rows)
+        self.quarantine = quarantine
         self.interactive_max = interactive_max
+        self.default_deadline_s = default_deadline_s
         self._autostart = autostart
         self._rid = 0
         self._rid_lock = threading.Lock()
@@ -171,14 +250,25 @@ class SweepService:
         block on the calling thread.  Deterministic tests drive this."""
         return self.scheduler.step()
 
-    def close(self) -> None:
+    def close(self, drain: bool = True) -> None:
+        """Shut the service down.
+
+        ``drain=True`` (default) flushes gracefully: requests that already
+        have rows in completed blocks finish their remaining rows; queued
+        requests that never reached a block fail loudly (error + terminal
+        sentinel).  ``drain=False`` aborts everything immediately.  Either
+        way no client stream is left hanging.
+        """
         self._stop.set()
         self.scheduler.kick()
         if self._thread is not None:
             self._thread.join(timeout=5.0)
             self._thread = None
-        # any sweep still queued gets its terminal sentinel (and an
-        # error) instead of leaving its consumer blocked forever
+        if drain:
+            self.scheduler.drain("sweep service closed")
+        # anything still queued (drain=False, or a request the drain could
+        # not flush) gets its terminal sentinel instead of leaving its
+        # consumer blocked forever
         self.scheduler.abort_pending("sweep service closed")
         self.scheduler.close()
 
@@ -195,9 +285,24 @@ class SweepService:
         request path); returns the warm entry."""
         return self.cache.get_or_build(design, key=key)
 
+    def _rejected_handle(self, D: np.ndarray, reason: str, tenant: str,
+                         fallback: bool) -> SweepHandle:
+        """A handle that never touches the scheduler: every row reports
+        ``REJECTED`` with ``reason`` — definite, immediate, no hang."""
+        with self._rid_lock:
+            self._rid += 1
+            rid = self._rid
+        req = _Request(rid, None, D, INTERACTIVE, fallback, queue.Queue(),
+                       tenant=tenant)
+        req.reject_reason = reason
+        req.finalized = True
+        req.out_q.put(_DONE)
+        return SweepHandle(req, self.scheduler)
+
     def submit(self, design: Union[Program, SimResult], depths,
                key: Optional[str] = None, priority: Optional[str] = None,
-               fallback: bool = True) -> SweepHandle:
+               fallback: bool = True, tenant: str = DEFAULT_TENANT,
+               deadline_s: Optional[float] = None) -> SweepHandle:
         """Enqueue a sweep of ``depths`` (one row = one candidate depth
         vector) against ``design`` and return a :class:`SweepHandle`.
 
@@ -205,25 +310,55 @@ class SweepService:
         :class:`SimResult`; repeat designs (by content fingerprint or
         explicit ``key``) are served from the warm cache.  ``priority``
         defaults to ``"interactive"`` for at most ``interactive_max`` rows
-        and ``"bulk"`` otherwise.
+        and ``"bulk"`` otherwise.  ``tenant`` names the client for
+        admission-control quotas; ``deadline_s`` (default
+        ``default_deadline_s``) bounds the request end-to-end — rows not
+        delivered in time terminate ``TIMED_OUT``.  A request refused by
+        quarantine or admission control returns a handle whose rows are
+        all ``REJECTED`` (see :attr:`SweepHandle.rejected`).
         """
         if self._stop.is_set():
             raise RuntimeError("sweep service is closed")
-        entry = self.cache.get_or_build(design, key=key)
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
         D = np.asarray(depths, dtype=np.int64)
         if D.ndim == 1:
             D = D[None, :]
-        if D.ndim != 2 or D.shape[1] != entry.n_fifos:
-            raise ValueError(f"depth matrix {D.shape} does not match "
-                             f"{entry.n_fifos} FIFOs")
+        program = (design.graph.program if isinstance(design, SimResult)
+                   else design)
+        if key is None:
+            with program_mutation_lock(program):
+                key = program_fingerprint(program)
+        # refuse before building: a quarantined design must not cost a
+        # cache build, and a shed request must not evict a warm entry
+        if self.quarantine.is_quarantined(key):
+            why = self.quarantine.reason(key)
+            return self._rejected_handle(
+                D, "design quarantined after repeated solve faults"
+                   f"{': ' + why if why else ''}", tenant, fallback)
+        shed = self.admission.try_admit(tenant, len(D))
+        if shed is not None:
+            return self._rejected_handle(D, shed, tenant, fallback)
+        try:
+            entry = self.cache.get_or_build(design, key=key)
+            if D.ndim != 2 or D.shape[1] != entry.n_fifos:
+                raise ValueError(f"depth matrix {D.shape} does not match "
+                                 f"{entry.n_fifos} FIFOs")
+        except Exception as exc:
+            self.admission.release(tenant, len(D))
+            if not isinstance(exc, ValueError):
+                self.quarantine.strike(key, f"cache build faulted: {exc!r}")
+            raise
         if priority is None:
             priority = INTERACTIVE if len(D) <= self.interactive_max else BULK
         assert priority in (INTERACTIVE, BULK), priority
         with self._rid_lock:
             self._rid += 1
             rid = self._rid
-        req = _Request(rid, entry, D, priority, fallback,
-                       queue.Queue())
+        req = _Request(rid, entry, D, priority, fallback, queue.Queue(),
+                       tenant=tenant, deadline_s=deadline_s,
+                       on_finalize=lambda r:
+                           self.admission.release(r.tenant, r.K))
         handle = SweepHandle(req, self.scheduler)
         if req.K == 0:
             # an empty sweep completes immediately — it must never reach
@@ -251,5 +386,10 @@ class SweepService:
 
     # -------------------------------------------------------------- stats
     def stats(self) -> Dict[str, Dict[str, float]]:
-        return {"cache": self.cache.stats(),
-                "scheduler": self.scheduler.stats()}
+        out = {"cache": self.cache.stats(),
+               "scheduler": self.scheduler.stats(),
+               "admission": self.admission.stats(),
+               "quarantine": self.quarantine.stats()}
+        if self.scheduler.injector is not None:
+            out["faults"] = self.scheduler.injector.stats()
+        return out

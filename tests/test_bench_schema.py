@@ -55,6 +55,12 @@ REQUIRED_KEYS = {
     "sweep_service_speedup_vs_loop": numbers.Real,
     "sweep_dedup_ratio": numbers.Real,
     "sweep_cache_hit_rate": numbers.Real,
+    # PR 6: fault-tolerant sweep serving (repro/sweep faults + admission)
+    "sweep_fault_free_configs_per_sec": numbers.Real,
+    "sweep_fault_injected_configs_per_sec": numbers.Real,
+    "sweep_fault_recovery_overhead": numbers.Real,
+    "sweep_fault_retries": numbers.Integral,
+    "sweep_fault_p99_interactive_ms": numbers.Real,
 }
 
 _DOC_KEY = re.compile(r"^\|\s*`([a-z0-9_]+)`\s*\|", re.MULTILINE)

@@ -37,7 +37,7 @@ from repro.designs.paper import PAPER_DESIGNS
 from repro.designs.typea import (fir_filter, high_latency_pipe,
                                  merge_sort_staged, parallel_loops,
                                  producer_consumer, skynet_like)
-from repro.sweep import SweepService
+from repro.sweep import FaultInjector, RetryPolicy, SweepService
 
 GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           "golden")
@@ -225,6 +225,20 @@ def test_golden_conformance(name, regen_golden):
             s3 = svc.sweep(g, D3)                # different block split
             assert (s3.cycles == s1.cycles).all(), name
             assert (s3.status == s1.status).all(), name
+
+        # recovery must not bend verdicts: with the first shard solve
+        # faulting (injected, deterministic) and retried, every delivered
+        # row is still bit-identical to the fault-free run
+        inj = FaultInjector(seed=1).arm("shard.fault", at=[0])
+        with SweepService(block=2, shards=2, autostart=False,
+                          injector=inj,
+                          retry=RetryPolicy(max_attempts=3,
+                                            backoff_s=0.0)) as svc:
+            s4 = svc.sweep(g, D3)
+            assert (s4.cycles == s1.cycles).all(), name
+            assert (s4.status == s1.status).all(), name
+            assert svc.scheduler.stats()["retries"] >= 1, name
+            assert svc.scheduler.stats()["faulted_rows"] == 0, name
 
 
 def test_golden_corpus_is_complete():

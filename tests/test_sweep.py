@@ -259,7 +259,7 @@ def test_scheduler_fault_fails_requests_loudly():
     sentinel and result()/stream() raise instead of hanging forever."""
     builder = lambda: producer_consumer(n=32, depth=2)
     with SweepService(block=4) as svc:
-        def boom(entry, Du):
+        def boom(entry, Du, t_deadline=None):
             raise RuntimeError("injected solver fault")
 
         svc.scheduler._solve_unique = boom
@@ -578,3 +578,397 @@ def test_resimulate_batch_dedups_fallbacks(monkeypatch):
     assert len(sim_calls) == 1                   # one fallback for 6 rows
     full = simulate(fig4_ex5(), depths=(100, 2))
     assert (out.cycles[:6] == full.cycles).all()
+
+
+# ---------------------------------------------------------- fault tolerance
+# ISSUE 6: every recovery path driven deterministically through the seeded
+# FaultInjector in manual mode — no real crashes, no sleeps (the real-pool
+# drills live under the `faults` marker below).  The invariants under test:
+# no client stream ever hangs, every row ends in a definite status, and
+# rows that ARE delivered stay bit-identical to the generator engine.
+from repro.sweep import (DEFAULT_TENANT, DesignQuarantine,  # noqa: E402
+                         FAULTED, FaultInjector, REJECTED, RetryPolicy,
+                         SweepTimeoutError, TIMED_OUT)
+
+
+def test_fault_injector_is_deterministic_per_site():
+    """Same seed + same plan => same firing pattern, independent of how
+    often OTHER sites are drawn in between."""
+    a = FaultInjector(seed=7).arm("shard.fault", rate=0.3)
+    b = FaultInjector(seed=7).arm("shard.fault", rate=0.3)
+    fired_a = [a.draw("shard.fault") for _ in range(40)]
+    fired_b = []
+    for _ in range(40):
+        b.draw("shard.hang")             # interleaved draws at other sites
+        fired_b.append(b.draw("shard.fault"))
+        b.draw("pool.broken")
+    assert fired_a == fired_b and any(fired_a)
+    # keyed arms scope to one design: other keys never fire
+    c = FaultInjector(seed=7).arm("shard.fault", rate=1.0, key="poisoned")
+    assert not c.draw("shard.fault", key="clean")
+    assert c.draw("shard.fault", key="poisoned")
+
+
+def test_retry_policy_backoff_caps():
+    p = RetryPolicy(max_attempts=4, backoff_s=0.01, backoff_mult=4.0,
+                    max_backoff_s=0.05)
+    assert p.backoff(0) == pytest.approx(0.01)
+    assert p.backoff(1) == pytest.approx(0.04)
+    assert p.backoff(2) == pytest.approx(0.05)   # capped
+
+
+def test_quarantine_trips_and_cooldown_resets():
+    q = DesignQuarantine(threshold=2)
+    assert not q.strike("k", "first")
+    assert q.strike("k", "second")               # trips on the 2nd strike
+    assert q.is_quarantined("k") and "second" in q.reason("k")
+    assert not q.is_quarantined("other")
+    q.reset("k")
+    assert not q.is_quarantined("k")
+    qc = DesignQuarantine(threshold=1, cooldown_s=0.0)
+    qc.strike("k", "boom")
+    assert not qc.is_quarantined("k")            # cooldown already elapsed
+
+
+def test_transient_shard_fault_is_retried_bit_identical():
+    """One injected shard fault, absorbed by the retry policy: verdicts
+    identical to the fault-free run, zero rows lost."""
+    builder = lambda: producer_consumer(n=32, depth=4)
+    base = simulate(builder())
+    D = np.array([[1], [2], [4], [8]])
+    ref = resimulate_batch(base, D)
+    inj = FaultInjector(seed=3).arm("shard.fault", at=[0])
+    with _manual_service(block=8, injector=inj,
+                         retry=RetryPolicy(max_attempts=3,
+                                           backoff_s=0.0)) as svc:
+        out = svc.sweep(builder(), D)
+    _assert_outcome_equal(out, ref, "transient fault")
+    st = svc.scheduler.stats()
+    assert st["retries"] >= 1 and st["faulted_rows"] == 0
+    assert inj.stats()["fired"]["shard.fault"] == 1
+
+
+def test_retry_exhaustion_faults_only_that_shard():
+    """A persistently faulting shard fails ITS rows (FAULTED, definite,
+    with a reason) while the surviving shard's rows deliver exactly."""
+    builder = lambda: producer_consumer(n=32, depth=4)
+    base = simulate(builder())
+    D = np.array([[1], [2], [3], [4], [5], [6], [7], [8]])  # sorted unique
+    ref = resimulate_batch(base, D)
+    # launch draws: chunk0 -> #0, chunk1 -> #1; chunk0's retry -> #2
+    inj = FaultInjector(seed=3).arm("shard.fault", at=[0, 2])
+    with _manual_service(block=8, shards=2, min_shard_rows=1, injector=inj,
+                         retry=RetryPolicy(max_attempts=2,
+                                           backoff_s=0.0)) as svc:
+        out = svc.sweep(builder(), D)
+    assert (out.status[:4] == FAULTED).all()
+    assert (out.cycles[:4] == -1).all()
+    for k in range(4):
+        assert "attempts" in out.reasons[k], out.reasons[k]
+    assert (out.status[4:] == ref.status[4:]).all()
+    assert (out.cycles[4:] == ref.cycles[4:]).all()
+    st = svc.scheduler.stats()
+    assert st["faulted_rows"] == 4 and st["retries"] == 1
+    assert svc.quarantine.stats()["strikes"] == 1
+
+
+def test_shard_corruption_detected_and_retried():
+    """A shard returning malformed arrays must never deliver wrong
+    verdicts: host-side validation treats it as a retryable fault."""
+    builder = lambda: producer_consumer(n=32, depth=4)
+    base = simulate(builder())
+    D = np.array([[1], [2], [4], [8]])
+    ref = resimulate_batch(base, D)
+    inj = FaultInjector(seed=11).arm("shard.corrupt", at=[0])
+    with _manual_service(block=8, injector=inj,
+                         retry=RetryPolicy(max_attempts=3,
+                                           backoff_s=0.0)) as svc:
+        out = svc.sweep(builder(), D)
+    _assert_outcome_equal(out, ref, "corruption retried")
+    assert svc.scheduler.stats()["retries"] >= 1
+
+
+def test_hung_shard_times_out_under_deadline():
+    """A hung worker cannot hang the client: the deadline bounds the wait
+    and every undelivered row terminates TIMED_OUT."""
+    builder = lambda: producer_consumer(n=32, depth=4)
+    D = np.array([[1], [2], [3], [4], [5], [6], [7], [8]])
+    inj = FaultInjector(seed=5, hang_s=5.0).arm("shard.hang", at=[0])
+    with _manual_service(block=8, shards=2, min_shard_rows=1,
+                         injector=inj,
+                         retry=RetryPolicy(max_attempts=2,
+                                           backoff_s=0.0)) as svc:
+        h = svc.submit(builder(), D, deadline_s=0.2)
+        while svc.step():
+            pass
+        out = h.result()
+    assert (out.status == TIMED_OUT).all()
+    assert all("deadline" in r or "timed out" in r for r in out.reasons)
+    assert svc.scheduler.stats()["timed_out_rows"] >= len(D)
+
+
+def test_deadline_expired_before_scheduling_fails_fast():
+    builder = lambda: producer_consumer(n=32, depth=4)
+    with _manual_service(block=4) as svc:
+        h = svc.submit(builder(), np.array([[2], [4]]), deadline_s=0.0)
+        _time_spin()
+        while svc.step():
+            pass
+        out = h.result()
+    assert (out.status == TIMED_OUT).all()
+    assert "before this config was scheduled" in out.reasons[0]
+
+
+def _time_spin():
+    import time
+    t0 = time.perf_counter()
+    while time.perf_counter() <= t0:
+        pass
+
+
+def test_injected_pool_breakage_respawns_and_delivers():
+    """An injected broken pool triggers one bounded respawn; the block
+    still delivers bit-identically."""
+    builder = lambda: skynet_like(items=48, depth=6)
+    base = simulate(builder())
+    rng = np.random.default_rng(7)
+    D = rng.integers(1, 13, size=(8, len(base.depths)))
+    ref = resimulate_batch(base, D)
+    inj = FaultInjector(seed=9).arm("pool.broken", at=[0])
+    with _manual_service(block=8, shards=2, min_shard_rows=1,
+                         injector=inj) as svc:
+        out = svc.sweep(builder(), D)
+    assert (out.status == ref.status).all()
+    assert (out.cycles == ref.cycles).all()
+    assert svc.scheduler.stats()["pool_respawns"] == 1
+
+
+def test_pool_respawn_budget_exhaustion_fails_definite():
+    """When the pool keeps breaking past the respawn budget, rows fail
+    FAULTED with a reason — never a hang, never a crash."""
+    builder = lambda: producer_consumer(n=32, depth=4)
+    D = np.array([[1], [2], [3], [4]])
+    inj = FaultInjector(seed=2).arm("pool.broken", rate=1.0)
+    with _manual_service(block=4, shards=2, min_shard_rows=1,
+                         max_pool_respawns=0, injector=inj) as svc:
+        out = svc.sweep(builder(), D)
+    assert (out.status == FAULTED).all()
+    assert all("respawn budget" in r for r in out.reasons)
+
+
+def test_quarantine_fails_queued_rows_and_rejects_resubmits():
+    """Striking past the threshold trips the design's circuit breaker:
+    queued same-design rows fail fast and new submits are refused at the
+    front door, while a clean design keeps being served; reset restores."""
+    builder = lambda: producer_consumer(n=32, depth=4)
+    base = simulate(builder())
+    clean_builder = lambda: producer_consumer(n=16, depth=2)
+    clean_base = simulate(clean_builder())
+    ref_clean = resimulate_batch(clean_base, np.array([[2]]))
+    inj = FaultInjector(seed=4).arm("shard.fault", at=[0])
+    with _manual_service(block=1, injector=inj, quarantine_after=1,
+                         retry=RetryPolicy(max_attempts=1,
+                                           backoff_s=0.0)) as svc:
+        hA = svc.submit(base, np.array([[2]]))
+        hB = svc.submit(base, np.array([[4]]))
+        while svc.step():
+            pass
+        outA, outB = hA.result(), hB.result()
+        assert (outA.status == FAULTED).all()
+        assert (outB.status == FAULTED).all()
+        assert "quarantined" in outB.reasons[0]
+        # front door refuses the poisoned design...
+        hC = svc.submit(base, np.array([[8]]))
+        assert hC.rejected
+        outC = hC.result()
+        assert (outC.status == REJECTED).all()
+        assert "quarantined" in outC.reasons[0]
+        # ...while a clean design is served normally
+        outClean = svc.sweep(clean_base, np.array([[2]]))
+        _assert_outcome_equal(outClean, ref_clean, "clean design")
+        # reset gives the design a fresh budget (injector plan is spent)
+        svc.quarantine.reset()
+        outD = svc.sweep(base, np.array([[2]]))
+        ref = resimulate_batch(base, np.array([[2]]))
+        _assert_outcome_equal(outD, ref, "after reset")
+    assert svc.quarantine.stats()["trips"] == 1
+
+
+def test_admission_quota_rejects_then_releases():
+    """Per-tenant quota: excess rows are shed with a definite REJECTED
+    verdict; finishing a sweep releases its reservation."""
+    builder = lambda: producer_consumer(n=32, depth=4)
+    base = simulate(builder())
+    D3 = np.array([[1], [2], [4]])
+    ref = resimulate_batch(base, D3)
+    with _manual_service(block=8,
+                         max_inflight_rows_per_tenant=4) as svc:
+        h1 = svc.submit(base, D3, tenant="alice")
+        h2 = svc.submit(base, D3, tenant="alice")      # 3+3 > 4: shed
+        h3 = svc.submit(base, D3, tenant="bob")        # other tenant: fine
+        assert not h1.rejected and h2.rejected and not h3.rejected
+        out2 = h2.result()                             # immediate, no hang
+        assert (out2.status == REJECTED).all()
+        assert "quota" in out2.reasons[0]
+        assert svc.admission.inflight("alice") == 3
+        while svc.step():
+            pass
+        _assert_outcome_equal(h1.result(), ref, "admitted tenant")
+        _assert_outcome_equal(h3.result(), ref, "other tenant")
+        # completion released the reservation: same tenant admits again
+        assert svc.admission.inflight("alice") == 0
+        h4 = svc.submit(base, D3, tenant="alice")
+        assert not h4.rejected
+        while svc.step():
+            pass
+        _assert_outcome_equal(h4.result(), ref, "after release")
+        st = svc.admission.stats()
+        assert st["rejected_requests"] == 1 and st["rejected_rows"] == 3
+
+
+def test_queue_depth_load_shedding():
+    builder = lambda: producer_consumer(n=32, depth=4)
+    base = simulate(builder())
+    with _manual_service(block=8, max_queued_rows=4) as svc:
+        h1 = svc.submit(base, np.array([[1], [2], [4]]), tenant="a")
+        h2 = svc.submit(base, np.array([[1], [2], [4]]), tenant="b")
+        assert not h1.rejected and h2.rejected
+        assert "load shed" in h2.result().reasons[0]
+        while svc.step():
+            pass
+        assert h1.result().ok.any()
+
+
+def test_cancellation_releases_admission_reservation():
+    builder = lambda: producer_consumer(n=32, depth=4)
+    base = simulate(builder())
+    with _manual_service(block=8,
+                         max_inflight_rows_per_tenant=4) as svc:
+        h1 = svc.submit(base, np.array([[1], [2], [4]]), tenant="a")
+        h1.cancel()
+        while svc.step():
+            pass
+        h1.result()
+        assert svc.admission.inflight("a") == 0
+
+
+def test_close_drains_inflight_and_fails_queued():
+    """close(drain=True): a sweep with rows already in completed blocks
+    finishes its remaining rows; one that never reached a block fails
+    loudly.  Either way no stream hangs."""
+    builder = lambda: producer_consumer(n=32, depth=4)
+    base = simulate(builder())
+    D = np.array([[1], [2], [4], [8]])
+    ref = resimulate_batch(base, D)
+    with _manual_service(block=2) as svc:
+        h1 = svc.submit(base, D)
+        assert svc.step()                    # 2 of 4 rows delivered
+        h2 = svc.submit(base, np.array([[16]]))
+        svc.close(drain=True)
+        _assert_outcome_equal(h1.result(), ref, "drained to completion")
+        with pytest.raises(RuntimeError, match="service closed"):
+            h2.result()
+
+
+def test_stream_timeout_is_descriptive_and_resumable():
+    """stream(timeout=) raises SweepTimeoutError (request id + progress),
+    not a bare queue.Empty; the handle keeps working afterwards."""
+    builder = lambda: producer_consumer(n=32, depth=4)
+    base = simulate(builder())
+    D = np.array([[1], [2], [4]])
+    ref = resimulate_batch(base, D)
+    with _manual_service(block=8) as svc:
+        h = svc.submit(base, D)
+        with pytest.raises(SweepTimeoutError) as ei:
+            next(iter(h.stream(timeout=0.01)))
+        assert ei.value.request_id == h.request_id
+        assert ei.value.delivered == 0 and ei.value.total == 3
+        assert "0/3" in str(ei.value) and "resume" in str(ei.value)
+        while svc.step():                    # handle is still live
+            pass
+        _assert_outcome_equal(h.result(), ref, "resumed after timeout")
+
+
+def test_acceptance_faulty_run_definite_and_clean_tenant_exact():
+    """ISSUE 6 acceptance: under a seeded injector faulting one bulk
+    tenant's design, no stream hangs, every row of every request ends in
+    a definite status, and the clean tenant's rows are bit-identical."""
+    bulk_builder = lambda: skynet_like(items=48, depth=6)
+    bulk_base = simulate(bulk_builder())
+    live_builder = lambda: producer_consumer(n=32, depth=4)
+    live_base = simulate(live_builder())
+    rng = np.random.default_rng(13)
+    Db = rng.integers(1, 13, size=(20, len(bulk_base.depths)))
+    Dl = np.array([[1], [2], [4], [8]])
+    ref_b = resimulate_batch(bulk_base, Db)
+    ref_l = resimulate_batch(live_base, Dl)
+    inj = FaultInjector(seed=5)
+    with _manual_service(block=4, quarantine_after=100, injector=inj,
+                         retry=RetryPolicy(max_attempts=2,
+                                           backoff_s=0.0)) as svc:
+        bulk_key = svc.warm(bulk_base).key
+        # draw #0 is the interactive tenant's single block; the bulk
+        # blocks draw from #1 on.  Plan: bulk block #2 faults on both its
+        # attempts (draws 2 and 3) and exhausts the 2-attempt budget.
+        inj.arm("shard.fault", at=[2, 3], key=bulk_key)
+        hb = svc.submit(bulk_base, Db, tenant="bulk", priority=BULK)
+        hl = svc.submit(live_base, Dl, tenant="live")
+        while svc.step():
+            pass
+        out_b, out_l = hb.result(), hl.result()
+    # the clean tenant is untouched by the other tenant's faults
+    _assert_outcome_equal(out_l, ref_l, "clean tenant")
+    # the faulted tenant: every row definite; delivered rows exact
+    assert inj.stats()["fired"]["shard.fault"] >= 1
+    assert (out_b.status != CANCELLED).all()
+    faulted = out_b.status == FAULTED
+    assert faulted.any(), "seeded plan should exhaust at least one retry"
+    assert (out_b.status[~faulted] == ref_b.status[~faulted]).all()
+    assert (out_b.cycles[~faulted] == ref_b.cycles[~faulted]).all()
+    assert (out_b.cycles[faulted] == -1).all()
+
+
+# ------------------------------------------------------- real-pool drills
+@pytest.mark.faults
+def test_process_pool_blob_reship_and_bit_identity():
+    """mode="process": freshly spawned workers pull each design's graph
+    through the need-blob round trip once, then stay warm — results
+    bit-identical to the library path."""
+    builder = lambda: skynet_like(items=48, depth=6)
+    base = simulate(builder())
+    rng = np.random.default_rng(3)
+    D = rng.integers(1, 13, size=(16, len(base.depths)))
+    ref = resimulate_batch(base, D)
+    with _manual_service(block=16, shards=2, mode="process",
+                         min_shard_rows=1) as svc:
+        svc.warm(base)
+        out = svc.sweep(base, D)
+    assert (out.status == ref.status).all()
+    assert (out.cycles == ref.cycles).all()
+    assert svc.scheduler.stats()["blob_reships"] >= 1
+
+
+@pytest.mark.faults
+def test_process_pool_killed_worker_respawns_and_recovers():
+    """A worker hard-exiting breaks the real ProcessPoolExecutor; the
+    scheduler respawns it (warm, via the pool initializer) and the sweep
+    still delivers bit-identically."""
+    import os as _os
+    builder = lambda: skynet_like(items=48, depth=6)
+    base = simulate(builder())
+    rng = np.random.default_rng(3)
+    D = rng.integers(1, 13, size=(16, len(base.depths)))
+    ref = resimulate_batch(base, D)
+    with _manual_service(block=16, shards=2, mode="process",
+                         min_shard_rows=1, shard_timeout_s=30.0) as svc:
+        svc.warm(base)
+        # prime the blob registry so the respawned pool starts warm
+        h0 = svc.submit(base, D[:2])
+        while svc.step():
+            pass
+        h0.result()
+        svc.scheduler._pool.submit(_os._exit, 11)   # murder a worker
+        out = svc.sweep(base, D)
+    assert (out.status == ref.status).all()
+    assert (out.cycles == ref.cycles).all()
+    assert svc.scheduler.stats()["pool_respawns"] >= 1

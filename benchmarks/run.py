@@ -29,7 +29,8 @@ def main(quick: bool = False, out: str = None) -> None:
     from benchmarks.tables import (fig8_perfsim, fig8_speed_scaling,
                                    pipeline_table, table3_funcsim,
                                    table5_vs_decoupled, table6_batch_dse,
-                                   table6_incremental, table_hybrid_replay,
+                                   table6_incremental, table_corpus_scaling,
+                                   table_hybrid_replay,
                                    table_query_periodization,
                                    table_sweep_faults, table_sweep_service,
                                    table_trace_replay)
@@ -46,6 +47,7 @@ def main(quick: bool = False, out: str = None) -> None:
     rows += table_trace_replay()
     rows += table_hybrid_replay()
     rows += table_query_periodization()
+    rows += table_corpus_scaling()
     if not quick:
         rows += pipeline_table()
     print("\n== CSV (name,us_per_call,derived) ==")

@@ -504,6 +504,89 @@ def table_sweep_faults() -> List[str]:
     return rows
 
 
+# ------------------------------------- ISSUE 7: corpus scaling benchmark
+def table_corpus_scaling() -> List[str]:
+    """Per-engine throughput on constrained-random corpus designs at 100 /
+    300 / 1000 modules (ISSUE 7): generator vs auto (hybrid) modules/sec,
+    warm sweep-service configs/sec on the 300-module design, and the
+    sampled RTL-oracle agreement count."""
+    import numpy as np
+
+    from repro.corpus import BENCH_SPEC, generate, rtl_crosscheck
+    from repro.sweep import SweepService
+
+    rows = []
+    print("\n== ISSUE 7: corpus scaling (constrained-random designs) ==")
+    print(f"{'scale':>6s} {'mods':>5s} {'cycles':>7s} {'gen ms':>7s} "
+          f"{'auto ms':>8s} {'gen mod/s':>10s} {'auto mod/s':>11s}")
+    repeats = 1 if QUICK else 3
+
+    def live_case(scale):
+        # first live seed keeps the benchmark on the engine (not on the
+        # deadlock early-out), deterministically
+        for seed in range(8):
+            c = generate(seed, scale=scale, spec=BENCH_SPEC)
+            if not simulate(c.builder(), trace="never").deadlock:
+                return c
+        raise AssertionError(f"no live corpus seed at scale {scale}")
+
+    case300 = None
+    for scale in (100, 300, 1000):
+        c = live_case(scale)
+        if scale == 300:
+            case300 = c
+        mods = c.meta["modules"]
+        g, t_gen = _timeit(lambda: simulate(c.builder(), trace="never"),
+                           repeats)
+        a, t_auto = _timeit(lambda: simulate(c.builder(), trace="auto"),
+                            repeats)
+        assert a.cycles == g.cycles and a.outputs == g.outputs
+        print(f"{scale:6d} {mods:5d} {g.cycles:7d} {t_gen*1e3:6.1f} "
+              f"{t_auto*1e3:7.1f} {mods/t_gen:10,.0f} {mods/t_auto:11,.0f}")
+        rows.append(f"corpus_scaling/m{scale},{t_auto*1e6:.0f},"
+                    f"modules={mods};cycles={g.cycles}")
+        BENCH_CORE[f"corpus_modules_per_sec_generator_{scale}"] = mods / t_gen
+        BENCH_CORE[f"corpus_modules_per_sec_auto_{scale}"] = mods / t_auto
+
+    # warm sweep-service throughput over depth variants of the 300-module
+    # design: offsets only grow depths, so every variant stays live
+    g = simulate(case300.builder(), trace="auto")
+    base = np.asarray(g.depths, dtype=np.int64)
+    K = 16 if QUICK else 64
+    rng = np.random.default_rng(7)
+    pool = base + rng.integers(0, 5, size=(max(K // 4, 1), base.size))
+    D = pool[rng.integers(0, len(pool), size=K)]
+    svc = SweepService(block=16, shards=2, mode="thread")
+    try:
+        svc.sweep(case300.builder(), D)        # cold: build + warm-up
+        t0 = time.perf_counter()
+        svc.sweep(case300.builder(), D)
+        t_warm = time.perf_counter() - t0
+    finally:
+        svc.close()
+    cps = K / t_warm
+    print(f"sweep service on {case300.meta['modules']}-module design: "
+          f"{K} configs warm in {t_warm*1e3:.1f} ms ({cps:,.0f} cfg/s)")
+    rows.append(f"corpus_scaling/sweep300_K{K},{t_warm/K*1e6:.1f},"
+                f"configs_per_sec={cps:.0f}")
+    BENCH_CORE["corpus_sweep_configs_per_sec_300"] = cps
+
+    # sampled RTL-oracle cross-check: cycle-exact agreement required
+    rtl_cases = ([(s, 10) for s in range(6)] + [(s, 32) for s in range(5)]
+                 + [(0, 100)])
+    agree = 0
+    for seed, scale in rtl_cases:
+        c = generate(seed, scale=scale, spec=BENCH_SPEC)
+        r = rtl_crosscheck(c.builder)
+        assert r["agree"], f"{c.name}: engine vs RTL oracle disagree: {r}"
+        agree += 1
+    print(f"RTL oracle agreement: {agree}/{len(rtl_cases)} corpus designs "
+          f"cycle-exact")
+    rows.append(f"corpus_scaling/rtl_agree,{0:.0f},count={agree}")
+    BENCH_CORE["corpus_rtl_agree_count"] = agree
+    return rows
+
+
 # -------------------------------------------------- Fig 8(b) scaling regime
 def fig8_speed_scaling() -> List[str]:
     """Event-driven vs cycle-stepped scaling: speedup grows with idle cycles

@@ -1371,6 +1371,8 @@ class HybridSim:
         self.bursts = 0
         self.batch_rows = 0           # rows committed by the batch solver
         self.batch_solves = 0
+        self._batch_futile = -1       # pending volume of the last no-commit
+        #                               batch attempt (futility gate)
         self.cache_bulk_rows = 0      # cached rows replayed array-at-a-time
         if cache is not None:
             self.sig = HybridCache.signature(program)
@@ -1729,8 +1731,19 @@ class HybridSim:
                 pending += d
                 dirty.add(st.mid)
         changed = False
-        if pending >= self.batch_min > 0 and self._solve_batch():
-            changed = True
+        # Futility gate: when a batch attempt committed nothing (every
+        # window truncated to zero — e.g. most modules parked for good in a
+        # deadlocking 1000-module corpus design), re-running it per query
+        # at the same pending volume just rebuilds the same system.  The
+        # scalar frontier below computes the identical fixpoint in small
+        # hops, so skipping the batch can never change results — only
+        # which solver commits the rows.
+        if pending >= self.batch_min > 0 and pending != self._batch_futile:
+            if self._solve_batch():
+                changed = True
+                self._batch_futile = -1
+            else:
+                self._batch_futile = pending
         while dirty:
             st = self.mods[dirty.pop()]
             if self._advance_frontier(st):

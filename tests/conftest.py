@@ -16,8 +16,24 @@ def pytest_addoption(parser):
         "--regen-golden", action="store_true", default=False,
         help="rewrite tests/golden/*.json from the generator engine "
              "instead of asserting against them")
+    parser.addoption(
+        "--corpus-seeds", type=int, default=8, metavar="N",
+        help="seeds per scale for the big corpus sweep (-m corpus)")
+    parser.addoption(
+        "--corpus-scale", type=int, default=100, metavar="MODULES",
+        help="module-count target for the big corpus sweep (-m corpus)")
 
 
 @pytest.fixture
 def regen_golden(request):
     return request.config.getoption("--regen-golden")
+
+
+@pytest.fixture
+def corpus_seeds(request):
+    return request.config.getoption("--corpus-seeds")
+
+
+@pytest.fixture
+def corpus_scale(request):
+    return request.config.getoption("--corpus-scale")

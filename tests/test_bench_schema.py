@@ -61,6 +61,15 @@ REQUIRED_KEYS = {
     "sweep_fault_recovery_overhead": numbers.Real,
     "sweep_fault_retries": numbers.Integral,
     "sweep_fault_p99_interactive_ms": numbers.Real,
+    # PR 7: constrained-random corpus scaling (repro/corpus)
+    "corpus_modules_per_sec_generator_100": numbers.Real,
+    "corpus_modules_per_sec_generator_300": numbers.Real,
+    "corpus_modules_per_sec_generator_1000": numbers.Real,
+    "corpus_modules_per_sec_auto_100": numbers.Real,
+    "corpus_modules_per_sec_auto_300": numbers.Real,
+    "corpus_modules_per_sec_auto_1000": numbers.Real,
+    "corpus_sweep_configs_per_sec_300": numbers.Real,
+    "corpus_rtl_agree_count": numbers.Integral,
 }
 
 _DOC_KEY = re.compile(r"^\|\s*`([a-z0-9_]+)`\s*\|", re.MULTILINE)

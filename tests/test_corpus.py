@@ -1,0 +1,229 @@
+"""Corpus generator + conformance sweep tests.
+
+Tier-1 (fast slice, runs in the default ``pytest -x -q``):
+
+  * determinism — ``generate(seed, scale)`` rebuilds the bit-identical
+    Program (``program_fingerprint`` equality) and identical metadata;
+  * structural invariants — every FIFO has exactly one writer and one
+    reader, module count tracks the ``scale`` knob;
+  * declared taxonomy matches ``classify_dynamic``;
+  * a seed sweep of small designs through the full 7-path differential
+    conformance runner (generator / auto / hybrid / periodized /
+    resimulate / resimulate_batch / sweep);
+  * a pinned seed list (``tests/golden/corpus_seeds.json``) — cycles,
+    deadlock verdict and FIFO digest per ``(seed, scale)``, refreshed
+    with ``--regen-golden`` like the rest of the golden suite;
+  * a 300-module design end-to-end through ``simulate`` and the sweep
+    service (the ISSUE's scale acceptance gate).
+
+Opt-in big tiers:
+
+  * ``-m corpus`` — the 100+-module sweep; size it with
+    ``--corpus-seeds N --corpus-scale M``;
+  * ``-m rtl``    — the sampled RTL-oracle cross-check.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import simulate
+from repro.core.taxonomy import classify_dynamic
+from repro.core.trace import program_fingerprint
+from repro.corpus import (BENCH_SPEC, BLOCKING_SPEC, DEFAULT_SPEC,
+                          check_conformance, fifo_digest, generate,
+                          rtl_crosscheck)
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "golden")
+SEEDS_PATH = os.path.join(GOLDEN_DIR, "corpus_seeds.json")
+
+#: the checked-in seed list: every (seed, scale) pinned in corpus_seeds.json
+PINNED = [(seed, scale) for scale in (10, 32) for seed in range(8)]
+
+
+# ---------------------------------------------------------------------------
+# generator: determinism + structure
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed,scale", [(0, 10), (3, 32), (1, 100)])
+def test_regenerate_is_bit_identical(seed, scale):
+    a = generate(seed, scale=scale)
+    b = generate(seed, scale=scale)
+    assert a.meta == b.meta
+    assert program_fingerprint(a.builder()) == program_fingerprint(
+        b.builder())
+    # and the simulated artifacts agree too, not just the static hash
+    ra, rb = simulate(a.builder()), simulate(b.builder())
+    assert ra.cycles == rb.cycles
+    assert fifo_digest(ra) == fifo_digest(rb)
+
+
+@pytest.mark.parametrize("scale", [10, 32, 100])
+def test_scale_knob_tracks_module_count(scale):
+    for seed in range(4):
+        c = generate(seed, scale=scale)
+        assert scale <= c.meta["modules"] <= scale + 16
+        assert c.meta["modules"] == len(c.builder().modules)
+
+
+@pytest.mark.parametrize("spec", [DEFAULT_SPEC, BLOCKING_SPEC, BENCH_SPEC],
+                         ids=["default", "blocking", "bench"])
+def test_structural_invariants(spec):
+    for seed in range(4):
+        c = generate(seed, scale=24, spec=spec)
+        c.validate()                     # SPSC + full connectivity
+        assert len(c.meta["clusters"]) >= 1
+        assert c.meta["fifos"] == len(c.builder().fifos)
+
+
+def test_different_seeds_differ():
+    fps = {program_fingerprint(generate(s, scale=24).builder())
+           for s in range(6)}
+    assert len(fps) == 6
+
+
+def test_declared_taxonomy_matches_dynamic_classification():
+    for seed in range(6):
+        c = generate(seed, scale=24)
+        cls = classify_dynamic(c.builder)
+        assert cls.dtype == c.meta["declared"], (
+            f"{c.name}: declared {c.meta['declared']} but classified "
+            f"{cls.dtype}")
+        assert cls.has_nonblocking == c.meta["has_nb"]
+
+
+def test_blocking_spec_has_no_nb():
+    for seed in range(4):
+        c = generate(seed, scale=24, spec=BLOCKING_SPEC)
+        assert not c.meta["has_nb"]
+        assert c.meta["declared"] in ("A", "B")
+
+
+# ---------------------------------------------------------------------------
+# conformance: fast tier-1 slice
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(8))
+def test_conformance_small(seed):
+    for scale in (10, 32):
+        c = generate(seed, scale=scale)
+        check_conformance(c.builder, name=c.name)
+
+
+def test_conformance_blocking_spec():
+    for seed in range(4):
+        c = generate(seed, scale=24, spec=BLOCKING_SPEC)
+        check_conformance(c.builder, name=c.name)
+
+
+def test_starved_designs_deadlock_conformantly():
+    spec = DEFAULT_SPEC.replace(starve_prob=0.5)
+    deadlocks = 0
+    for seed in range(8):
+        c = generate(seed, scale=24, spec=spec)
+        rep = check_conformance(c.builder, name=c.name)
+        deadlocks += rep.deadlock
+    assert deadlocks >= 1          # the knob actually produces deadlocks
+    assert deadlocks < 8           # ... but not unconditionally
+
+
+# ---------------------------------------------------------------------------
+# pinned seed list (golden)
+# ---------------------------------------------------------------------------
+def _seed_record(seed, scale):
+    c = generate(seed, scale=scale)
+    g = simulate(c.builder(), trace="never")
+    return {
+        "seed": seed, "scale": scale,
+        "modules": c.meta["modules"], "fifos": c.meta["fifos"],
+        "declared": c.meta["declared"],
+        "cycles": int(g.cycles), "deadlock": bool(g.deadlock),
+        "fifo_digest": fifo_digest(g),
+    }
+
+
+@pytest.mark.golden
+def test_corpus_seed_list(regen_golden):
+    records = [_seed_record(seed, scale) for seed, scale in PINNED]
+    if regen_golden:
+        with open(SEEDS_PATH, "w") as f:
+            json.dump(records, f, indent=1, sort_keys=True)
+            f.write("\n")
+        pytest.skip(f"rewrote {os.path.basename(SEEDS_PATH)} "
+                    f"({len(records)} entries)")
+    assert os.path.exists(SEEDS_PATH), (
+        "corpus_seeds.json missing — run: PYTHONPATH=src python -m pytest "
+        "tests/test_corpus.py -m golden --regen-golden")
+    with open(SEEDS_PATH) as f:
+        want = json.load(f)
+    assert records == want
+
+
+# ---------------------------------------------------------------------------
+# scale acceptance: a 300-module design end-to-end (tier-1)
+# ---------------------------------------------------------------------------
+def test_300_module_design_end_to_end():
+    c = generate(2, scale=300)
+    assert c.meta["modules"] >= 300
+    g = simulate(c.builder(), trace="auto")
+    assert not g.deadlock
+    assert g.cycles > 0
+
+    from repro.sweep import SweepService
+    dv = tuple(int(d) + 1 for d in g.depths)
+    D = np.asarray([dv, [int(d) for d in g.depths]], dtype=np.int64)
+    svc = SweepService(block=16, shards=2, autostart=False)
+    try:
+        s = svc.sweep(g, D)
+        assert int(s.cycles[1]) == int(g.cycles)
+        assert not s.results[1].deadlock
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# big tiers: -m corpus (100+-module sweep) and -m rtl (oracle cross-check)
+# ---------------------------------------------------------------------------
+def pytest_generate_tests(metafunc):
+    if "big_seed" in metafunc.fixturenames:
+        n = metafunc.config.getoption("--corpus-seeds")
+        metafunc.parametrize("big_seed", range(n))
+
+
+@pytest.mark.corpus
+def test_conformance_at_scale(big_seed, corpus_scale):
+    c = generate(big_seed, scale=corpus_scale)
+    rep = check_conformance(c.builder, name=c.name)
+    assert rep.ok
+
+
+@pytest.mark.corpus
+def test_conformance_1000_modules():
+    c = generate(0, scale=1000)
+    rep = check_conformance(c.builder, name=c.name)
+    assert rep.ok
+    assert c.meta["modules"] >= 1000
+
+
+@pytest.mark.rtl
+def test_rtl_crosscheck_sampled():
+    # >= 10 corpus designs must agree with the cycle-stepped RTL oracle —
+    # outputs AND exact cycle counts (deadlock verdicts for dead designs)
+    cases = ([(s, 10) for s in range(6)] + [(s, 32) for s in range(6)]
+             + [(0, 100), (2, 300)])
+    for seed, scale in cases:
+        c = generate(seed, scale=scale)
+        r = rtl_crosscheck(c.builder)
+        assert r["agree"], f"{c.name}: engine vs RTL oracle disagree: {r}"
+
+
+@pytest.mark.rtl
+def test_rtl_crosscheck_starved():
+    spec = DEFAULT_SPEC.replace(starve_prob=0.5)
+    seen_deadlock = False
+    for seed in range(4):
+        c = generate(seed, scale=16, spec=spec)
+        r = rtl_crosscheck(c.builder)
+        assert r["agree"], f"{c.name}: {r}"
+        seen_deadlock = seen_deadlock or r["deadlock"]
+    assert seen_deadlock

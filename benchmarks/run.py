@@ -32,6 +32,7 @@ def main(quick: bool = False, out: str = None) -> None:
                                    table6_incremental, table_corpus_scaling,
                                    table_hybrid_replay,
                                    table_query_periodization,
+                                   table_sparse_maxplus,
                                    table_sweep_faults, table_sweep_service,
                                    table_trace_replay)
     rows = []
@@ -48,6 +49,7 @@ def main(quick: bool = False, out: str = None) -> None:
     rows += table_hybrid_replay()
     rows += table_query_periodization()
     rows += table_corpus_scaling()
+    rows += table_sparse_maxplus()
     if not quick:
         rows += pipeline_table()
     print("\n== CSV (name,us_per_call,derived) ==")

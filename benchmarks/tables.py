@@ -587,6 +587,70 @@ def table_corpus_scaling() -> List[str]:
     return rows
 
 
+# ----------------------------------------- sparse Pallas max-plus DSE lane
+def table_sparse_maxplus() -> List[str]:
+    """Sparse chain-structured Pallas max-plus solver (``backend="jax"``,
+    interpret mode — CI needs no TPU) on a 100-module corpus design:
+    device-lane throughput at K = 1e3 / 1e4 / 1e5 depth configs, plus the
+    ratio against the numpy Gauss-Seidel fixpoint at the largest K.  The
+    dense ``jax_dense`` lowering cannot run this design at all — its
+    (K, npad, npad) working set is O(n^2) per config.  ``--quick`` keeps
+    every key but solves K/100 configs per point."""
+    import numpy as np
+
+    from repro.core.dse import solve_block_status
+    from repro.core.incremental import compile_graph
+    from repro.corpus import BENCH_SPEC, generate
+
+    rows = []
+    print("\n== Sparse max-plus: backend=\"jax\" on a 100-module corpus "
+          "design ==")
+    for seed in range(8):           # first live seed, deterministically
+        c = generate(seed, scale=100, spec=BENCH_SPEC)
+        base_run = simulate(c.builder(), trace="auto")
+        if not base_run.deadlock:
+            break
+    g = compile_graph(base_run.graph)
+    base = np.asarray([int(d) for d in base_run.depths], np.int64)
+    rng = np.random.default_rng(0)
+    shrink = 100 if QUICK else 1
+    block = 1024
+
+    def depths(K):
+        # offsets only grow depths, so every config stays live
+        return base[None, :] + rng.integers(0, 5, size=(K, base.size))
+
+    # warm both solvers (jit compile + chain-flat export on the jax side)
+    solve_block_status(g, depths(min(block, 1000 // shrink)),
+                       backend="jax", block=block)
+    Kn = max(1000 // shrink, 1)
+    s_np, t_np = _timeit(lambda: solve_block_status(g, depths(Kn),
+                                                    backend="numpy",
+                                                    block=block))
+    us_np = t_np / Kn * 1e6
+    print(f"{'K':>8s} {'sparse ms':>10s} {'us/cfg':>7s} "
+          f"{'vs numpy':>9s} {'reused':>7s}")
+    us_jx = us_np
+    for K in (1000, 10_000, 100_000):
+        Keff = max(K // shrink, 1)
+        D = depths(Keff)
+        out, t_jx = _timeit(lambda: solve_block_status(g, D, backend="jax",
+                                                       block=block))
+        us_jx = t_jx / Keff * 1e6
+        reused = int((out[0] == 0).sum())
+        print(f"{Keff:8d} {t_jx*1e3:10.1f} {us_jx:7.0f} "
+              f"{us_np/us_jx:8.2f}x {reused:7d}")
+        rows.append(f"sparse_maxplus/{c.name}_K{K},{us_jx:.1f},"
+                    f"reused={reused};Keff={Keff}")
+        BENCH_CORE[f"maxplus_sparse_us_per_config_{K}"] = us_jx
+    # interpret mode runs the TPU kernel through XLA on CPU, so this ratio
+    # understates the device lane; it pins the trajectory either way
+    BENCH_CORE["maxplus_sparse_vs_numpy_speedup"] = us_np / us_jx
+    print(f"numpy baseline: {us_np:.0f} us/cfg at K={Kn} "
+          f"(ratio at largest K: {us_np/us_jx:.2f}x)")
+    return rows
+
+
 # -------------------------------------------------- Fig 8(b) scaling regime
 def fig8_speed_scaling() -> List[str]:
     """Event-driven vs cycle-stepped scaling: speedup grows with idle cycles

@@ -33,13 +33,17 @@ lifted to a batch of solves):
 
 Backends: ``"numpy"`` (default, above), ``"reference"`` (the synchronous
 Jacobi :func:`~repro.core.graph.longest_path_chains_batched` — the oracle
-the production solver is tested against), and ``"jax"`` — a ``jax.vmap``
-lowering of the dense max-plus fixpoint onto the existing
-``repro.kernels.maxplus`` Pallas kernel for device-resident sweeps of
-small graphs.
+the production solver is tested against), ``"jax"`` — the sparse
+chain-structured Pallas max-plus solver (``repro.kernels.maxplus.sparse``:
+segmented cummax over the chain-major flat arrays, on-device WAR
+regeneration, O(K·n + K·edges) memory) for device-resident sweeps of any
+graph size — and ``"jax_dense"``, the historical ``jax.vmap`` lowering of
+the dense O(n²)-per-config max-plus fixpoint, kept for tiny graphs and as
+a second device oracle.
 """
 from __future__ import annotations
 
+import copy
 import threading
 import time as _time
 from contextlib import nullcontext
@@ -49,7 +53,8 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from .engine import OmniSim, simulate
-from .graph import longest_path_chains, longest_path_chains_batched
+from .graph import (export_chain_flat, longest_path_chains,
+                    longest_path_chains_batched)
 from .incremental import NEGI, CompiledGraph, compile_graph
 from .program import SimResult
 
@@ -120,6 +125,7 @@ class _BatchArrays:
     t_inf: np.ndarray = None       # no-WAR (infinite-depth) fixpoint times
     c_inf: np.ndarray = None       # ... and its contribution vector
     war_cache: Dict[tuple, tuple] = field(default_factory=dict)
+    sparse: object = None          # lazy ChainFlatArrays (jax sparse lane)
 
 
 def _chain_of(starts: np.ndarray, col: int) -> int:
@@ -541,13 +547,19 @@ def solve_block_status(cache: CompiledGraph, depth_block,
     total_rounds = 0
 
     if len(alive):
-        if backend == "jax":
+        if backend == "jax_dense":
             blocks = [(np.arange(len(alive)),
                        *_solve_dense_jax(cache, ba, D[alive],
-                                         interpret=jax_interpret))]
-        elif backend in ("numpy", "reference"):
-            solve = (_solve_block_numpy if backend == "numpy"
-                     else _solve_block_reference)
+                                         interpret=jax_interpret,
+                                         block=block))]
+        elif backend in ("numpy", "reference", "jax"):
+            if backend == "numpy":
+                solve = _solve_block_numpy
+            elif backend == "reference":
+                solve = _solve_block_reference
+            else:           # sparse chain-structured Pallas max-plus lane
+                solve = (lambda ba_, Db_: _solve_sparse_jax(
+                    cache, ba_, Db_, interpret=jax_interpret))
             blocks = []
             for lo in range(0, len(alive), max(block, 1)):
                 sl = np.arange(lo, min(lo + max(block, 1), len(alive)))
@@ -615,11 +627,15 @@ def materialize_block(result: SimResult, Du: np.ndarray,
         reasons_u[u] = status_reason(cache, int(status_u[u]),
                                      int(violated_u[u]), Du[u], fifo_names)
         if status_u[u] == REUSED:
+            # per-shell copies: SimStats is a mutable dataclass and
+            # constraints a mutable list — sharing them would let a caller
+            # mutating one sweep result corrupt its siblings AND the cached
+            # base run (the graph stays shared by design: it IS the cache)
             results_u[u] = SimResult(
                 program=result.program, outputs=dict(result.outputs),
                 cycles=int(cycles_u[u]), engine=engine_label,
-                stats=result.stats, graph=engine,
-                constraints=result.constraints,
+                stats=copy.copy(result.stats), graph=engine,
+                constraints=list(result.constraints),
                 depths=tuple(int(d) for d in Du[u]))
         elif fallback_mask[u] and status_u[u] in FALLBACK_STATUSES:
             with (lock if lock is not None else nullcontext()), \
@@ -657,10 +673,12 @@ def resimulate_batch(result: SimResult, depth_matrix,
     work proportional to the number of *distinct* configs
     (``BatchOutcome.n_unique``).
 
-    ``backend="jax"`` lowers the fixpoint onto the dense Pallas max-plus
-    kernel via ``jax.vmap`` (device-resident sweeps; small graphs only);
+    ``backend="jax"`` lowers the fixpoint onto the sparse chain-structured
+    Pallas max-plus kernel (``repro.kernels.maxplus.sparse``) — O(K·n +
+    K·edges) memory, device-resident sweeps; ``backend="jax_dense"`` keeps
+    the legacy dense O(n^2)-per-config vmap lowering for tiny graphs;
     ``backend="reference"`` runs the synchronous Jacobi oracle.  ``block``
-    bounds the numpy working set (configs per fixpoint slab).
+    bounds the per-slab working set for every backend.
     """
     t0 = _time.perf_counter()
     engine: OmniSim = result.graph
@@ -699,18 +717,70 @@ def resimulate_batch(result: SimResult, depth_matrix,
 
 
 # ---------------------------------------------------------------------------
-# jax.vmap backend: dense max-plus fixpoint on the Pallas kernel
+# jax backends: sparse chain-structured kernel + legacy dense vmap
 # ---------------------------------------------------------------------------
-def _solve_dense_jax(cache: CompiledGraph, ba: _BatchArrays, Db: np.ndarray,
-                     interpret: bool = True):
-    """Batched node times via ``jax.vmap`` over the dense Pallas max-plus
-    kernel (``repro.kernels.maxplus``) — the device-resident path.
+# Working-set ceiling for the dense lowering: K * npad^2 int32 entries per
+# slab.  A module constant so regression tests can shrink it and exercise
+# the chunking/error paths without gigabyte batches.
+_DENSE_CAP = 1 << 27
 
-    Builds one dense ``(K, npad, npad)`` max-plus adjacency (shared SEQ+RAW
-    skeleton broadcast, per-config WAR entries scattered in) and vmaps the
-    jitted fixpoint.  Convergence is certified by one extra sweep:
-    non-converged rows (WAR cycles) report False.  Small graphs only — the
-    dense form is O(n^2) per config.
+
+def _int32_saturation_guard(ba: _BatchArrays, backend: str) -> None:
+    """Refuse int32 device transfer when finite times could exceed int32.
+
+    ``ba.bound`` bounds every finite (acyclic) node time and the numpy
+    path switches to int64 at ``2^28``; the jax lanes are int32-only, so
+    past that point a silently wrapped time could flip a constraint
+    comparison.  Raise instead of wrapping.
+    """
+    if ba.bound >= (1 << 28):
+        raise ValueError(
+            f"backend={backend!r} solves in int32 but the graph's "
+            f"path-length bound {ba.bound} >= 2^28 risks overflow; "
+            f"use backend='numpy' (int64) for this design")
+
+
+def _sparse_arrays(cache: CompiledGraph, ba: _BatchArrays):
+    """Lazily built (and cached on ``ba``) chain-flat device transfer
+    arrays for the sparse jax lane."""
+    if ba.sparse is None:
+        from ..kernels.maxplus.sparse import NEG
+        ba.sparse = export_chain_flat(
+            ba.slices, ba.cw, ba.c_inf, ba.raw_dst, ba.raw_src, ba.raw_w,
+            ba.fifo_w_cols, ba.fifo_r_cols, ba.fifo_blocking,
+            bound=ba.bound, neg=int(NEG))
+    return ba.sparse
+
+
+def _solve_sparse_jax(cache: CompiledGraph, ba: _BatchArrays,
+                      Db: np.ndarray, interpret: bool = True):
+    """Sparse chain-structured Pallas solve for one block of configs.
+
+    Seeds every config at the no-WAR fixpoint contribution (``c_inf``, a
+    lower bound of every least fixpoint) and iterates the Jacobi
+    chain-pass/cross-pass to the same unique least fixpoint the numpy
+    Gauss-Seidel reaches — times, and hence statuses/cycles/violations,
+    are bit-identical for converged rows.  O(K·n + K·edges) memory.
+    """
+    from ..kernels.maxplus import sparse as sp
+
+    _int32_saturation_guard(ba, "jax")
+    arr = _sparse_arrays(cache, ba)
+    return sp.solve_chains(arr, Db, use_pallas=True, interpret=interpret)
+
+
+def _solve_dense_jax(cache: CompiledGraph, ba: _BatchArrays, Db: np.ndarray,
+                     interpret: bool = True, block: int = 128):
+    """Batched node times via ``jax.vmap`` over the dense Pallas max-plus
+    kernel (``repro.kernels.maxplus``) — the legacy O(n^2)-per-config
+    lowering, kept as ``backend="jax_dense"`` for tiny graphs.
+
+    Builds dense ``(slab, npad, npad)`` max-plus adjacencies (shared
+    SEQ+RAW skeleton broadcast, per-config WAR entries scattered in) and
+    vmaps the jitted fixpoint, chunking the batch so one slab never
+    exceeds ``_DENSE_CAP`` int32 entries (a *single* config past the cap
+    is a hard error).  Convergence is certified by one extra sweep:
+    non-converged rows (WAR cycles) report False.
     """
     import jax
     import jax.numpy as jnp
@@ -721,37 +791,51 @@ def _solve_dense_jax(cache: CompiledGraph, ba: _BatchArrays, Db: np.ndarray,
     n = cache.n
     npad = ((n + BLK - 1) // BLK) * BLK if n else BLK
     K = len(Db)
-    if K * npad * npad > (1 << 27):
+    if npad * npad > _DENSE_CAP:
         raise ValueError(
-            f"dense jax backend needs K*npad^2 <= 2^27 "
-            f"(got {K}x{npad}^2); use backend='numpy' for large graphs")
-    A = np.full((npad, npad), int(NEG32), dtype=np.int32)
+            f"dense jax backend needs npad^2 <= {_DENSE_CAP} per config "
+            f"(got {npad}^2); use backend='numpy' (or the sparse "
+            f"backend='jax') for large graphs")
+    _int32_saturation_guard(ba, "jax_dense")
+    slab = max(1, min(max(block, 1), _DENSE_CAP // (npad * npad)))
+    # clip int64 weights against the kernel's -INF before the int32 cast —
+    # a bare .astype would wrap NEGI into a huge positive phantom edge
+    # (the hazard ops.finalize_times documents for a/base)
     b = np.full((npad,), int(NEG32), dtype=np.int32)
     b[:n] = np.maximum(cache.base, int(NEG32)).astype(np.int32)
+    A = np.full((npad, npad), int(NEG32), dtype=np.int32)
     for ch in cache.chains:                      # SEQ skeleton
         if len(ch) > 1:
-            A[ch[1:], ch[:-1]] = cache.seq_w[ch[1:]].astype(np.int32)
-    A[cache.raw_dst, cache.raw_src] = cache.raw_w.astype(np.int32)
-    AK = np.broadcast_to(A, (K, npad, npad)).copy()
-    for fid, (w_nodes, r_nodes, blk) in enumerate(cache.fifos):
-        nw, nr = len(w_nodes), len(r_nodes)
-        if nw == 0 or int(Db[:, fid].min()) >= nw:
-            continue
-        w_seq = np.arange(1, nw + 1, dtype=np.int64)
-        tgt = w_seq[None, :] - Db[:, fid][:, None] - 1
-        valid = blk[None, :] & (tgt >= 0) & (tgt < nr)
-        kk, jj = np.nonzero(valid)
-        AK[kk, w_nodes[jj], r_nodes[tgt[kk, jj]]] = 1
-    aK = jnp.asarray(AK)
+            A[ch[1:], ch[:-1]] = np.maximum(
+                cache.seq_w[ch[1:]], int(NEG32)).astype(np.int32)
+    A[cache.raw_dst, cache.raw_src] = np.maximum(
+        cache.raw_w, int(NEG32)).astype(np.int32)
     bK = jnp.asarray(b)
     solve = jax.vmap(lambda a: longest_path(a, bK, use_pallas=True,
                                             interpret=interpret))
-    tK = solve(aK)
-    # certify fixpoint: one more sweep must be a no-op (cycles diverge)
     sweep = jax.vmap(lambda a, t: maxplus_sweep(a, t, bK,
                                                 interpret=interpret))
-    conv = np.asarray((sweep(aK, tK) == tK).all(axis=1))
-    times = np.asarray(tK)[:, :n].astype(np.int64)
+    times_parts, conv_parts = [], []
+    for lo in range(0, K, slab):
+        Ds = Db[lo:lo + slab]
+        AK = np.broadcast_to(A, (len(Ds), npad, npad)).copy()
+        for fid, (w_nodes, r_nodes, blk) in enumerate(cache.fifos):
+            nw, nr = len(w_nodes), len(r_nodes)
+            if nw == 0 or int(Ds[:, fid].min()) >= nw:
+                continue
+            w_seq = np.arange(1, nw + 1, dtype=np.int64)
+            tgt = w_seq[None, :] - Ds[:, fid][:, None] - 1
+            valid = blk[None, :] & (tgt >= 0) & (tgt < nr)
+            kk, jj = np.nonzero(valid)
+            AK[kk, w_nodes[jj], r_nodes[tgt[kk, jj]]] = 1
+        aK = jnp.asarray(AK)
+        tK = solve(aK)
+        # certify fixpoint: one more sweep must be a no-op (cycles diverge)
+        conv_parts.append(np.asarray((sweep(aK, tK) == tK).all(axis=1)))
+        times_parts.append(np.asarray(tK)[:, :n].astype(np.int64))
+    times = np.concatenate(times_parts) if times_parts else \
+        np.zeros((0, n), np.int64)
+    conv = np.concatenate(conv_parts) if conv_parts else np.zeros(0, bool)
     times_nm = (np.ascontiguousarray(times[:, ba.perm].T) if n
                 else times.T)
     return times_nm, conv

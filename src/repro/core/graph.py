@@ -19,7 +19,7 @@ Three longest-path backends:
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import List, NamedTuple, Sequence, Tuple
 
 import numpy as np
 
@@ -301,6 +301,112 @@ def longest_path_chains_batched(chain_slices, cw, base, cross_dst, cross_src,
     if len(act):                            # hit the iteration cap: cycles
         times[act] = t
     return times, converged, rounds
+
+
+class ChainFlatArrays(NamedTuple):
+    """Flat chain-major export of the batched solver's graph view.
+
+    The device-side (sparse Pallas) analogue of the argument list of
+    :func:`longest_path_chains_batched`: every array is chain-major and
+    ``int32`` (the transfer format of ``repro.kernels.maxplus.sparse``),
+    padded on the node axis to a ``lanes`` multiple so VPU tiles are
+    hardware-aligned.  Columns ``n..npad`` are inert: each is its own
+    one-element segment seeded at the -INF sentinel, so the segmented
+    cummax never leaks across them and no edge targets them.
+
+    The WAR tables are the *config-independent* half of WAR regeneration:
+    one row per blocking write of every FIFO that has at least one read
+    (a blocking overflow with no reads is a structural deadlock, masked
+    before solving).  The config-dependent half — which read each write
+    waits on under depth ``S`` (``tgt = wseq - S - 1``) — is computed
+    on-device from these tables plus the depth block.
+    """
+
+    n: int                    # real node count (columns 0..n are live)
+    npad: int                 # padded node-axis length (lanes multiple)
+    cw: np.ndarray            # (npad,) cumulative SEQ weights, 0 in padding
+    seg_start: np.ndarray     # (npad,) chain-start column of each column
+    c_seed: np.ndarray        # (npad,) seed contribution (NEG sentinel pad)
+    raw_dst: np.ndarray       # (E,) static RAW edges, chain-major columns
+    raw_src: np.ndarray       # (E,)
+    raw_w: np.ndarray         # (E,)
+    war_dst: np.ndarray       # (m,) blocking-write columns (unique)
+    war_wseq: np.ndarray      # (m,) 1-based write sequence numbers
+    war_fid: np.ndarray       # (m,) owning FIFO (column of the depth row)
+    war_nr: np.ndarray        # (m,) reads of that FIFO
+    war_roff: np.ndarray      # (m,) offset of that FIFO's reads in war_rcols
+    war_rcols: np.ndarray     # (R,) concatenated read columns, FIFO-major
+    bound: int                # upper bound on any acyclic path length
+    max_seg: int = 1          # longest chain (caps the scan's doubling steps)
+
+
+def export_chain_flat(chain_slices, cw, c_seed, raw_dst, raw_src, raw_w,
+                      fifo_w_cols, fifo_r_cols, fifo_blocking, bound: int,
+                      neg: int, lanes: int = 128) -> ChainFlatArrays:
+    """Build the :class:`ChainFlatArrays` transfer view of a chain-major
+    graph (``neg`` is the int32 -INF sentinel everything is clipped to)."""
+    n = len(cw)
+    npad = max(((n + lanes - 1) // lanes) * lanes, lanes)
+    seg = np.arange(npad, dtype=np.int32)      # padding: isolated segments
+    for (lo, hi) in chain_slices:
+        seg[lo:hi] = lo
+    cwp = np.zeros(npad, np.int32)
+    cwp[:n] = np.minimum(cw, np.iinfo(np.int32).max)
+    cs = np.full(npad, neg, np.int32)
+    cs[:n] = np.maximum(c_seed, neg)
+    wd, ws, wf, wnr, wro, rc = [], [], [], [], [], []
+    roff = 0
+    for fid, wcols in enumerate(fifo_w_cols):
+        rcols = fifo_r_cols[fid]
+        blk = fifo_blocking[fid]
+        if len(wcols) == 0 or len(rcols) == 0 or not blk.any():
+            continue
+        keep = np.flatnonzero(blk)             # only blocking writes can WAR
+        wd.append(wcols[keep])
+        ws.append(keep + 1)                    # 1-based write sequence
+        wf.append(np.full(len(keep), fid, np.int64))
+        wnr.append(np.full(len(keep), len(rcols), np.int64))
+        wro.append(np.full(len(keep), roff, np.int64))
+        rc.append(rcols)
+        roff += len(rcols)
+
+    def cat(parts):
+        return (np.concatenate(parts).astype(np.int32) if parts
+                else np.zeros(0, np.int32))
+
+    def pad(a, m, fill):
+        """Bucket array lengths to powers of two (floor 16) so solves of
+        different designs reuse the device solver's jit cache; padding
+        entries are inert (see the per-array fill values below)."""
+        if len(a) == 0 or len(a) == m:
+            return a.astype(np.int32)
+        out = np.full(m, fill, np.int32)
+        out[:len(a)] = a
+        return out
+
+    def bucket(k):
+        m = 16
+        while m < k:
+            m *= 2
+        return m
+
+    E = bucket(len(raw_dst)) if len(raw_dst) else 0
+    war_dst_c = cat(wd)
+    m = bucket(len(war_dst_c)) if len(war_dst_c) else 0
+    R = bucket(roff) if roff else 0
+    return ChainFlatArrays(
+        n=n, npad=npad, cw=cwp, seg_start=seg, c_seed=cs,
+        # padding edges: weight = -INF (a max-identity), src/dst = 0
+        raw_dst=pad(np.asarray(raw_dst), E, 0),
+        raw_src=pad(np.asarray(raw_src), E, 0),
+        raw_w=pad(np.maximum(raw_w, neg), E, neg),
+        # padding WAR rows: wseq = 0 makes every target negative (masked);
+        # nr = 1 / roff = 0 keep the clipped gather in bounds
+        war_dst=pad(war_dst_c, m, 0), war_wseq=pad(cat(ws), m, 0),
+        war_fid=pad(cat(wf), m, 0), war_nr=pad(cat(wnr), m, 1),
+        war_roff=pad(cat(wro), m, 0), war_rcols=pad(cat(rc), R, 0),
+        bound=int(bound),
+        max_seg=max([hi - lo for (lo, hi) in chain_slices] or [1]))
 
 
 def to_dense_blocks(indptr: np.ndarray, src: np.ndarray, wgt: np.ndarray,

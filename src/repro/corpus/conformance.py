@@ -9,7 +9,10 @@ the repo ships —
   * ``periodized``        — ``simulate_hybrid(periodize=True)``;
   * ``resimulate``        — incremental re-finalization at variant depths;
   * ``resimulate_batch``  — the batched solver over [variant, base] rows;
-  * ``sweep``             — ``repro.sweep.SweepService`` over the same rows
+  * ``sweep``             — ``repro.sweep.SweepService`` over the same rows;
+  * ``jax``               — the sparse Pallas solver lane
+    (``backend="jax"``), bit-identical verdicts against numpy over
+    [variant, base, all-ones] rows
 
 — and demands a bit-identical record from each: cycles, deadlock verdict,
 outputs, an order-insensitive digest of every FIFO table (commit times per
@@ -35,7 +38,7 @@ from repro.core.trace import TraceUnsupported, simulate_hybrid
 
 #: every engine path the runner differential-checks, in check order
 ENGINE_PATHS = ("generator", "auto", "hybrid", "periodized",
-                "resimulate", "resimulate_batch", "sweep")
+                "resimulate", "resimulate_batch", "sweep", "jax")
 
 
 def normalize(obj):
@@ -156,8 +159,8 @@ def check_conformance(builder, *, name: str = "design",
                 if p in paths:
                     report.paths[p] = f"skipped: TraceUnsupported ({e})"
 
-    variant_paths = [p for p in ("resimulate", "resimulate_batch", "sweep")
-                     if p in paths]
+    variant_paths = [p for p in ("resimulate", "resimulate_batch", "sweep",
+                                 "jax") if p in paths]
     if variant_paths:
         if g.deadlock:
             for p in variant_paths:
@@ -185,6 +188,27 @@ def check_conformance(builder, *, name: str = "design",
                     "ok" if ok else
                     f"MISMATCH: cycles={out.cycles.tolist()} "
                     f"want=[{vrec[0]}, {ref['cycles']}]")
+
+            if "jax" in paths:
+                # sparse device-lane differential: the solver verdicts
+                # (status / cycles / violated) must be bit-identical to
+                # the numpy fixpoint — including a depth-1 row that may
+                # starve writes (DEADLOCK) or invert event order (CYCLE)
+                Dj = np.asarray([dv, [int(d) for d in g.depths],
+                                 [1] * len(g.depths)], dtype=np.int64)
+                o_np = resimulate_batch(g, Dj, backend="numpy",
+                                        fallback=False)
+                o_jx = resimulate_batch(g, Dj, backend="jax",
+                                        fallback=False)
+                ok = (np.array_equal(o_np.status, o_jx.status)
+                      and np.array_equal(o_np.cycles, o_jx.cycles)
+                      and np.array_equal(o_np.violated, o_jx.violated))
+                report.paths["jax"] = (
+                    "ok" if ok else
+                    f"MISMATCH: jax status={o_jx.status.tolist()} "
+                    f"cycles={o_jx.cycles.tolist()} vs numpy "
+                    f"status={o_np.status.tolist()} "
+                    f"cycles={o_np.cycles.tolist()}")
 
             if "sweep" in paths:
                 D3 = np.asarray([dv, [int(d) for d in g.depths], dv],

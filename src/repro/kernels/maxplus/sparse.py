@@ -1,0 +1,247 @@
+"""Sparse chain-structured batched max-plus solver (Pallas TPU kernel).
+
+The dense kernel in ``kernel.py`` materializes the whole max-plus
+adjacency — O(n^2) per depth config — which caps the ``backend="jax"``
+DSE lane at tiny graphs.  This module is its sparse replacement: it runs
+the chain-decomposed fixpoint of ``core.dse._solve_block_numpy`` /
+``core.graph.longest_path_chains_batched`` directly over the chain-major
+flat arrays (:class:`repro.core.graph.ChainFlatArrays`), so a block of K
+depth configs costs O(K·n + K·edges) memory and sweeps of 10^5–10^6
+configs stay device-resident.
+
+Per fixpoint round (K configs at once):
+
+  1. **chain pass** — ``t = cw + segcummax(c - cw)``: one *segmented*
+     cummax over the (K, npad) contribution matrix, segment boundaries at
+     chain starts.  This is the Pallas kernel: a Hillis–Steele doubling
+     scan (log2(npad) shifted-max steps, each a full-tile VPU op) over
+     (ROWS, npad) VMEM tiles, gridded over config rows.  ``max`` is
+     idempotent, so overlapping windows need no flag bookkeeping — a
+     column takes its shifted partner iff the partner is at/after its
+     own chain start.
+  2. **cross pass** — static RAW edges (``c[dst] = max(c[dst],
+     t[src]+w)``) and depth-dependent WAR edges scattered back into the
+     contribution matrix.  Destinations are unique by construction (one
+     RAW in-edge per read node, one WAR in-edge per write node), so the
+     scatter-max is exact; XLA's native gather/scatter handles the
+     irregular indexing between kernel sweeps.
+
+WAR targets are computed **on-device** from the flat FIFO tables and the
+depth block: write ``wseq`` of FIFO ``f`` under depth ``S = Db[k, f]``
+waits on read ``wseq - S - 1`` (weight 1), masked out where the target
+does not exist.  Regeneration is therefore one gather per solve, not a
+host round-trip per config.
+
+Rows diverge independently: a config whose regenerated WAR edges form a
+cycle grows its times past the acyclic ``bound`` and is frozen (reported
+non-converged = CYCLE upstream) without taxing the other rows.
+
+Everything is int32 on device — callers must clip against :data:`NEG`
+and refuse graphs whose path-length bound nears int32 range (see
+``core.dse``'s saturation guard); this mirrors the wrap-around hazard
+``ops.finalize_times`` documents for the dense path.
+
+Shape bucketing: batch, edge and WAR-table lengths are padded up to
+powers of two (padding rows replicate row 0; padding edges carry the
+-INF weight, a max-identity) so repeated solves across designs and slab
+tails hit the jit cache instead of recompiling per shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ...core.graph import ChainFlatArrays
+
+# int32 -INF sentinel — matches the numpy solver's int32 mode, and leaves
+# headroom: with bound < 2^28 (enforced upstream) no max-plus candidate
+# t + w can underflow/overflow int32 arithmetic.
+NEG = -(1 << 29)
+LANES = 128        # node-axis padding unit (TPU lane width)
+ROWS = 8           # minimum configs per kernel row tile (sublane width)
+_TILE_BYTES = 1 << 21   # per-buffer VMEM budget for one (rows, npad) tile
+
+
+def _pow2(x: int, floor: int) -> int:
+    p = floor
+    while p < x:
+        p *= 2
+    return p
+
+
+def _rows_for(K: int, npad: int) -> int:
+    """Row-tile height: as tall as the VMEM budget allows (fewer grid
+    steps — interpret mode executes them sequentially), never taller than
+    the (power-of-two) batch.  Both are powers of two, so rows | K."""
+    cap = ROWS
+    while cap * 2 * npad * 4 <= _TILE_BYTES and cap < 512:
+        cap *= 2
+    return min(K, cap)
+
+
+# ---------------------------------------------------------------------------
+# segmented cummax: the chain pass
+# ---------------------------------------------------------------------------
+def _doubling_scan(x, seg, col, limit):
+    """Hillis–Steele segmented max-scan body shared by the Pallas kernel
+    and the jnp reference: log2(limit) shifted-max steps; a column accepts
+    its ``s``-shifted partner iff the partner sits at/after the column's
+    own segment start (idempotent max ⇒ overlap is harmless).  ``limit``
+    (a power of two >= the longest segment) caps the step count — chains
+    are usually far shorter than the padded node axis."""
+    s = 1
+    while s < limit:
+        shifted = jnp.concatenate(
+            [jnp.full((x.shape[0], s), NEG, x.dtype), x[:, :-s]], axis=1)
+        take = (col - s) >= seg
+        x = jnp.where(take, jnp.maximum(x, shifted), x)
+        s *= 2
+    return x
+
+
+def _segcummax_kernel(limit, x_ref, seg_ref, o_ref):
+    x = x_ref[...]                              # (rows, npad) int32
+    seg = seg_ref[...]                          # (1, npad) int32
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, x.shape[1]), 1)
+    o_ref[...] = _doubling_scan(x, seg, col, limit)
+
+
+def _scan_limit(npad: int, max_seg) -> int:
+    return npad if max_seg is None else min(_pow2(max(max_seg, 1), 16), npad)
+
+
+def segmented_cummax_ref(x: jnp.ndarray, seg_start: jnp.ndarray,
+                         max_seg=None):
+    """jnp reference: inclusive per-segment running max along axis 1."""
+    n = x.shape[1]
+    col = jnp.arange(n, dtype=jnp.int32)[None, :]
+    return _doubling_scan(x, seg_start[None, :].astype(jnp.int32), col,
+                          _scan_limit(n, max_seg))
+
+
+def segmented_cummax(x: jnp.ndarray, seg_start: jnp.ndarray, *,
+                     max_seg=None, use_pallas: bool = True,
+                     interpret: bool = True):
+    """Segmented cummax over (K, npad); ``seg_start[j]`` is column j's
+    segment start, ``max_seg`` an optional bound on segment length (caps
+    the scan's doubling steps).  K must be a ROWS multiple and npad a
+    LANES multiple for the Pallas path (callers bucket-pad; see
+    :func:`solve_chains`)."""
+    if not use_pallas:
+        return segmented_cummax_ref(x, seg_start, max_seg)
+    K, npad = x.shape
+    rows = _rows_for(K, npad)
+    assert K % rows == 0 and npad % LANES == 0, (K, npad)
+    seg2 = seg_start.reshape(1, npad).astype(jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_segcummax_kernel, _scan_limit(npad, max_seg)),
+        grid=(K // rows,),
+        in_specs=[
+            pl.BlockSpec((rows, npad), lambda i: (i, 0)),
+            pl.BlockSpec((1, npad), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, npad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((K, npad), x.dtype),
+        interpret=interpret,
+    )(x, seg2)
+
+
+# ---------------------------------------------------------------------------
+# the batched fixpoint
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit,
+                   static_argnames=("max_seg", "use_pallas", "interpret"))
+def _fixpoint(c0, cw, seg_start, raw_dst, raw_src, raw_w,
+              war_dst, war_wseq, war_fid, war_nr, war_roff, war_rcols,
+              Db, bound, iters, *, max_seg: int, use_pallas: bool,
+              interpret: bool):
+    K, npad = c0.shape
+    cw_row = cw[None, :]
+
+    # depth-dependent WAR targets, computed on-device once per solve:
+    # write wseq of FIFO fid waits on read (wseq - S - 1) under depth S
+    have_war = war_dst.shape[0] > 0
+    if have_war:
+        S = Db[:, war_fid]                                    # (K, m)
+        tgt = war_wseq[None, :] - S - 1
+        war_valid = (tgt >= 0) & (tgt < war_nr[None, :])
+        war_src = war_rcols[war_roff[None, :]
+                            + jnp.clip(tgt, 0, war_nr[None, :] - 1)]
+
+    def chain_pass(c):
+        seg = segmented_cummax(c - cw_row, seg_start, max_seg=max_seg,
+                               use_pallas=use_pallas, interpret=interpret)
+        return seg + cw_row
+
+    def cross_pass(c, t):
+        c2 = c
+        if raw_dst.shape[0]:
+            # w == NEG marks bucket-padding edges; real weights are >= 0.
+            # An unmasked padding edge would lift a NEG contribution to
+            # NEG + t[src] and perturb unreached-node sentinel times.
+            cand = jnp.where(raw_w[None, :] > jnp.int32(NEG),
+                             t[:, raw_src] + raw_w[None, :], jnp.int32(NEG))
+            c2 = c2.at[:, raw_dst].max(cand)
+        if have_war:
+            cand = jnp.take_along_axis(t, war_src, axis=1) + 1
+            cand = jnp.where(war_valid, cand, jnp.int32(NEG))
+            c2 = c2.at[:, war_dst].max(cand)
+        return c2
+
+    def body(state):
+        c, _, diverged, _, rounds = state
+        t = chain_pass(c)
+        diverged = diverged | (t > bound).any(axis=1)
+        c2 = cross_pass(c, t)
+        c2 = jnp.where(diverged[:, None], c, c2)   # freeze cyclic rows
+        pending = (c2 != c).any(axis=1) & ~diverged
+        return c2, t, diverged, pending, rounds + 1
+
+    def cond(state):
+        _, _, _, pending, rounds = state
+        return jnp.logical_and(pending.any(), rounds < iters)
+
+    state0 = (c0, c0, jnp.zeros(K, bool), jnp.ones(K, bool), jnp.int32(0))
+    _, t, diverged, pending, rounds = jax.lax.while_loop(cond, body, state0)
+    # pending rows at the cap never reached a fixpoint (cycle), same as
+    # longest_path_chains_batched's iteration-cap leftover rows
+    return t, ~(diverged | pending), rounds
+
+
+def solve_chains(arr: ChainFlatArrays, Db: np.ndarray, *,
+                 use_pallas: bool = True, interpret: bool = True):
+    """Solve K depth configs over one chain-flat graph.
+
+    ``Db``: (K, n_fifos) depth block.  Returns ``(times, converged,
+    rounds)`` — ``times`` (n, K) int32 in chain-major node order (the
+    layout ``core.dse.solve_block_status`` consumes), ``converged[k]``
+    False where config k's regenerated WAR edges form a cycle.
+    """
+    K = len(Db)
+    if K == 0 or arr.n == 0:
+        return (np.zeros((arr.n, K), np.int32), np.ones(K, bool), 0)
+    # bucket the batch axis so slab tails reuse the compiled solver; the
+    # padding rows replicate row 0 and converge exactly when it does
+    Kp = _pow2(K, max(ROWS, 1))
+    Dp = np.minimum(np.asarray(Db, np.int64), 1 << 30).astype(np.int32)
+    if Kp != K:
+        Dp = np.concatenate([Dp, np.broadcast_to(Dp[:1], (Kp - K,
+                                                          Dp.shape[1]))])
+    c0 = jnp.asarray(np.broadcast_to(arr.c_seed, (Kp, arr.npad)))
+    t, conv, rounds = _fixpoint(
+        c0, jnp.asarray(arr.cw), jnp.asarray(arr.seg_start),
+        jnp.asarray(arr.raw_dst), jnp.asarray(arr.raw_src),
+        jnp.asarray(arr.raw_w),
+        jnp.asarray(arr.war_dst), jnp.asarray(arr.war_wseq),
+        jnp.asarray(arr.war_fid), jnp.asarray(arr.war_nr),
+        jnp.asarray(arr.war_roff), jnp.asarray(arr.war_rcols),
+        jnp.asarray(Dp), jnp.int32(arr.bound),
+        jnp.int32(arr.n + 2),
+        max_seg=arr.max_seg,
+        use_pallas=use_pallas, interpret=interpret)
+    times = np.ascontiguousarray(np.asarray(t)[:K, :arr.n].T)
+    return times, np.asarray(conv)[:K], int(rounds)

@@ -203,7 +203,7 @@ def _apply_shard_faults(out, hang_s: float, boom: bool, corrupt: bool):
 
 def _shard_task(graph, Db: np.ndarray, backend: str, block: int,
                 hang_s: float = 0.0, boom: bool = False,
-                corrupt: bool = False):
+                corrupt: bool = False, jax_interpret: bool = True):
     """Thread/serial shard unit: solve one chunk (plus injected faults —
     the injector draws on the scheduler thread, deterministically, and
     ships only the outcome flags here)."""
@@ -211,13 +211,15 @@ def _shard_task(graph, Db: np.ndarray, backend: str, block: int,
         _time.sleep(hang_s)
     if boom:
         raise InjectedFault(SHARD_FAULT, -1)
-    out = solve_block_status(graph, Db, backend=backend, block=block)
+    out = solve_block_status(graph, Db, backend=backend, block=block,
+                             jax_interpret=jax_interpret)
     return _apply_shard_faults(out, 0.0, False, corrupt)
 
 
 def _process_shard_solve(key: str, blob: Optional[bytes], Db: np.ndarray,
                          backend: str, block: int, hang_s: float = 0.0,
-                         boom: bool = False, corrupt: bool = False):
+                         boom: bool = False, corrupt: bool = False,
+                         jax_interpret: bool = True):
     graph = _WORKER_GRAPHS.get(key)
     if graph is None:
         if blob is None:
@@ -232,7 +234,8 @@ def _process_shard_solve(key: str, blob: Optional[bytes], Db: np.ndarray,
         _time.sleep(hang_s)
     if boom:
         raise InjectedFault(SHARD_FAULT, -1)
-    out = solve_block_status(graph, Db, backend=backend, block=block)
+    out = solve_block_status(graph, Db, backend=backend, block=block,
+                             jax_interpret=jax_interpret)
     return _apply_shard_faults(out, 0.0, False, corrupt)
 
 
@@ -246,13 +249,15 @@ class BlockScheduler:
                  injector: Optional[FaultInjector] = None,
                  shard_timeout_s: Optional[float] = 30.0,
                  quarantine: Optional[DesignQuarantine] = None,
-                 max_pool_respawns: int = 2):
+                 max_pool_respawns: int = 2,
+                 jax_interpret: bool = True):
         assert mode in ("serial", "thread", "process"), mode
         self.block = max(int(block), 1)
         self.shards = max(int(shards), 1)
         self.mode = mode if self.shards > 1 else "serial"
         self.starvation_limit = max(int(starvation_limit), 1)
         self.backend = backend
+        self.jax_interpret = jax_interpret
         self.min_shard_rows = min_shard_rows
         self.retry = retry if retry is not None else RetryPolicy()
         self.injector = injector
@@ -517,17 +522,18 @@ class BlockScheduler:
                                                     key=entry.key))
         if not pooled:
             call = (lambda: _shard_task(entry.graph, Db, self.backend,
-                                        self.block, hang_s, boom, corrupt))
+                                        self.block, hang_s, boom, corrupt,
+                                        self.jax_interpret))
             return _Attempt(None, call, self._pool_gen)
         if self.mode == "process":
             self._register_blob(entry)
             fut = self._submit(_process_shard_solve, entry.key, None,
                                Db, self.backend, self.block,
-                               hang_s, boom, corrupt)
+                               hang_s, boom, corrupt, self.jax_interpret)
         else:
             fut = self._submit(_shard_task, entry.graph, Db,
                                self.backend, self.block,
-                               hang_s, boom, corrupt)
+                               hang_s, boom, corrupt, self.jax_interpret)
         return _Attempt(fut, None, self._pool_gen)
 
     def _collect(self, entry: CacheEntry, Db: np.ndarray,
@@ -584,7 +590,8 @@ class BlockScheduler:
                     fut = self._submit(
                         _process_shard_solve, entry.key,
                         self._register_blob(entry), Db, self.backend,
-                        self.block)
+                        self.block, 0.0, False, False,
+                        self.jax_interpret)
                     attempt = _Attempt(fut, None, self._pool_gen)
                     continue
                 status, cycles, violated, _rounds = out

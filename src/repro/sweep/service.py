@@ -190,7 +190,8 @@ class SweepService:
                  max_pool_respawns: int = 2,
                  max_inflight_rows_per_tenant: Optional[int] = None,
                  max_queued_rows: Optional[int] = None,
-                 default_deadline_s: Optional[float] = None):
+                 default_deadline_s: Optional[float] = None,
+                 jax_interpret: bool = True):
         self.cache = GraphCache(capacity=cache_capacity)
         quarantine = DesignQuarantine(threshold=quarantine_after,
                                       cooldown_s=quarantine_cooldown_s)
@@ -202,7 +203,8 @@ class SweepService:
                                         retry=retry, injector=injector,
                                         shard_timeout_s=shard_timeout_s,
                                         quarantine=quarantine,
-                                        max_pool_respawns=max_pool_respawns)
+                                        max_pool_respawns=max_pool_respawns,
+                                        jax_interpret=jax_interpret)
         self.admission = AdmissionController(
             max_inflight_rows_per_tenant=max_inflight_rows_per_tenant,
             max_queued_rows=max_queued_rows)

@@ -70,6 +70,11 @@ REQUIRED_KEYS = {
     "corpus_modules_per_sec_auto_1000": numbers.Real,
     "corpus_sweep_configs_per_sec_300": numbers.Real,
     "corpus_rtl_agree_count": numbers.Integral,
+    # PR 8: sparse chain-structured Pallas max-plus lane (backend="jax")
+    "maxplus_sparse_us_per_config_1000": numbers.Real,
+    "maxplus_sparse_us_per_config_10000": numbers.Real,
+    "maxplus_sparse_us_per_config_100000": numbers.Real,
+    "maxplus_sparse_vs_numpy_speedup": numbers.Real,
 }
 
 _DOC_KEY = re.compile(r"^\|\s*`([a-z0-9_]+)`\s*\|", re.MULTILINE)

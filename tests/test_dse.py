@@ -162,7 +162,7 @@ def test_batch_reference_backend_agrees():
 
 
 def test_batch_jax_backend_agrees():
-    """jax.vmap dense max-plus backend (Pallas interpret mode)."""
+    """Sparse chain-structured jax backend (Pallas interpret mode)."""
     pytest.importorskip("jax")
     base = simulate(producer_consumer(n=24, depth=3))
     D = np.array([[1], [2], [4], [8]])
@@ -218,3 +218,147 @@ def test_batch_speedup_256_configs():
     assert speedup >= 10.0, (
         f"batched DSE only {speedup:.1f}x over looped resimulate "
         f"({t_loop*1e3:.0f} ms vs {t_batch*1e3:.0f} ms for {K} configs)")
+
+
+def test_batch_jax_dense_backend_agrees():
+    """Legacy dense lowering (backend="jax_dense") still matches numpy."""
+    pytest.importorskip("jax")
+    base = simulate(producer_consumer(n=24, depth=3))
+    D = np.array([[1], [2], [4], [8]])
+    out = resimulate_batch(base, D, backend="numpy")
+    jd = resimulate_batch(base, D, backend="jax_dense")
+    assert (out.ok == jd.ok).all()
+    assert (out.cycles == jd.cycles).all()
+
+
+def test_batch_jax_sparse_deadlock_and_war_cycle():
+    """The sparse jax lane must classify starved writes (DEADLOCK) and
+    inverted event orders (WAR CYCLE) bit-identically to numpy — the
+    failure verdicts, not just the happy path."""
+    pytest.importorskip("jax")
+
+    def leftover():
+        prog = Program("leftover", declared_type="A")
+        d = prog.fifo("d", 8)
+
+        @prog.module("p")
+        def p():
+            for i in range(8):
+                yield Write(d, i)
+
+        @prog.module("c")
+        def c():
+            tot = 0
+            for _ in range(4):
+                tot += (yield Read(d))
+            yield Emit("sum", tot)
+
+        return prog
+
+    def burst_pingpong(n=8, depth=8):
+        prog = Program("burst_pingpong", declared_type="A")
+        cmd = prog.fifo("cmd", depth)
+        resp = prog.fifo("resp", depth)
+
+        @prog.module("ctrl")
+        def ctrl():
+            for i in range(n):
+                yield Write(cmd, i)
+            tot = 0
+            for _ in range(n):
+                tot += (yield Read(resp))
+            yield Emit("sum", tot)
+
+        @prog.module("proc")
+        def proc():
+            for _ in range(n):
+                v = yield Read(cmd)
+                yield Write(resp, 2 * v)
+
+        return prog
+
+    cases = [(leftover, np.array([[8], [4], [3], [1]])),
+             (burst_pingpong, np.array([(1, 1), (2, 2), (1, 8), (8, 1),
+                                        (4, 4), (8, 8)]))]
+    for builder, D in cases:
+        base = simulate(builder())
+        o_np = resimulate_batch(base, D, backend="numpy", fallback=False)
+        o_jx = resimulate_batch(base, D, backend="jax", fallback=False)
+        assert (o_np.status == o_jx.status).all(), builder.__name__
+        assert (o_np.cycles == o_jx.cycles).all(), builder.__name__
+        assert (o_np.violated == o_jx.violated).all(), builder.__name__
+    # the failure modes really were exercised
+    assert (resimulate_batch(simulate(leftover()), np.array([[1]]),
+                             backend="jax", fallback=False).status == 1).all()
+
+
+# ------------------------------------------- dense-path regression fixes
+def test_dense_jax_chunks_by_block(monkeypatch):
+    """Regression: a batch larger than the dense capacity must be slab-
+    chunked (honoring ``block``), not rejected outright."""
+    pytest.importorskip("jax")
+    import repro.core.dse as dse
+
+    base = simulate(producer_consumer(n=24, depth=3))
+    D = np.array([[1], [2], [3], [4], [6], [8]])
+    # npad = 128 -> one config occupies exactly the capacity: the old
+    # code raised for any K > 1, the fixed path chunks into slabs of 1
+    monkeypatch.setattr(dse, "_DENSE_CAP", 128 * 128)
+    out = resimulate_batch(base, D, backend="numpy")
+    jd = resimulate_batch(base, D, backend="jax_dense")
+    assert (out.ok == jd.ok).all()
+    assert (out.cycles == jd.cycles).all()
+    assert (out.violated == jd.violated).all()
+
+
+def test_dense_jax_single_config_capacity_error(monkeypatch):
+    """Only a SINGLE config exceeding dense capacity is an error — and the
+    message must point at a usable backend."""
+    pytest.importorskip("jax")
+    import repro.core.dse as dse
+
+    base = simulate(producer_consumer(n=24, depth=3))
+    monkeypatch.setattr(dse, "_DENSE_CAP", 128 * 128 - 1)
+    with pytest.raises(ValueError, match="numpy"):
+        resimulate_batch(base, np.array([[4]]), backend="jax_dense")
+
+
+def test_jax_backends_refuse_int32_overflow():
+    """Regression: both jax lanes must refuse (not silently wrap) a graph
+    whose path-length bound exceeds int32 headroom."""
+    pytest.importorskip("jax")
+    from repro.core.dse import _batch_arrays
+    from repro.core.incremental import compile_graph
+
+    base = simulate(producer_consumer(n=24, depth=3))
+    g = compile_graph(base.graph)
+    ba = _batch_arrays(g)
+    old = ba.bound
+    try:
+        ba.bound = 1 << 28              # numpy's int64 switchover point
+        for b in ("jax", "jax_dense"):
+            with pytest.raises(ValueError, match="numpy"):
+                resimulate_batch(base, np.array([[4]]), backend=b,
+                                 fallback=False)
+    finally:
+        ba.bound = old
+
+
+def test_reused_shells_do_not_alias_mutable_state():
+    """Regression: REUSED result shells shared the base run's mutable
+    ``stats`` object and ``constraints`` list — mutating one sweep result
+    corrupted its siblings and the cached base run."""
+    base = simulate(producer_consumer(n=32, depth=4))
+    D = np.array([[4], [8], [16]])
+    out = resimulate_batch(base, D)
+    assert out.ok.all()
+    r0, r1 = out.results[0], out.results[1]
+    assert r0.stats is not base.stats
+    assert r0.stats is not r1.stats
+    before = r1.stats.queries
+    r0.stats.queries = -123
+    r0.constraints.append("sentinel")
+    assert r1.stats.queries == before
+    assert base.stats.queries != -123
+    assert "sentinel" not in r1.constraints
+    assert "sentinel" not in base.constraints

@@ -205,6 +205,18 @@ def test_golden_conformance(name, regen_golden):
         assert int(out.cycles[0]) == vref["cycles"], name
         assert int(out.cycles[1]) == golden["cycles"], name
 
+        # sparse jax lane differential: solver verdicts bit-identical to
+        # numpy, including a depth-1 row that may deadlock or cycle
+        Dj = np.asarray([dv, golden["depths"], [1] * len(dv)],
+                        dtype=np.int64)
+        o_np = resimulate_batch(g, Dj, backend="numpy", fallback=False)
+        o_jx = resimulate_batch(g, Dj, backend="jax", fallback=False)
+        assert (o_np.status == o_jx.status).all(), \
+            f"{name}: jax status {o_jx.status} != numpy {o_np.status}"
+        assert (o_np.cycles == o_jx.cycles).all(), \
+            f"{name}: jax cycles {o_jx.cycles} != numpy {o_np.cycles}"
+        assert (o_np.violated == o_jx.violated).all(), name
+
         # sweep service: duplicate rows, tiny blocks, warm-cache repeat
         # with reversed arrival order, then a one-block split — all must
         # reproduce the same reference numbers bit-for-bit

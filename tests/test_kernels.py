@@ -209,3 +209,76 @@ def test_mlstm_chunk_matches_model_scan():
     pl_out = mlstm_chunk(q, k, v, ig, la, chunk=32, interpret=True)
     np.testing.assert_allclose(np.asarray(scan_out), np.asarray(pl_out),
                                rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------------- sparse maxplus
+from repro.kernels.maxplus.sparse import (segmented_cummax,
+                                          segmented_cummax_ref)
+
+
+def _random_segments(rng, npad):
+    seg = np.zeros(npad, np.int32)
+    lo = 0
+    while lo < npad:
+        ln = int(rng.integers(1, 17))
+        seg[lo:min(lo + ln, npad)] = lo
+        lo += ln
+    return seg
+
+
+def _segcummax_oracle(x, seg):
+    want = x.copy()
+    for j in range(1, x.shape[1]):
+        if seg[j] <= j - 1:            # previous column in the same segment
+            want[:, j] = np.maximum(want[:, j], want[:, j - 1])
+    return want
+
+
+@pytest.mark.parametrize("K,npad", [(8, 128), (32, 256), (64, 128)])
+def test_segmented_cummax_matches_oracle(K, npad):
+    """Pallas segmented cummax (and its jnp ref) vs a sequential oracle."""
+    rng = np.random.default_rng(K + npad)
+    seg = _random_segments(rng, npad)
+    x = rng.integers(-50, 50, size=(K, npad)).astype(np.int32)
+    want = _segcummax_oracle(x, seg)
+    got_pl = np.asarray(segmented_cummax(jnp.asarray(x), jnp.asarray(seg),
+                                         interpret=True))
+    got_ref = np.asarray(segmented_cummax_ref(jnp.asarray(x),
+                                              jnp.asarray(seg)))
+    assert (got_pl == want).all()
+    assert (got_ref == want).all()
+
+
+def test_segmented_cummax_max_seg_cap():
+    """Capping the doubling scan at the longest segment must not change
+    the result (segments here are <= 16 columns)."""
+    rng = np.random.default_rng(5)
+    seg = _random_segments(rng, 256)
+    x = rng.integers(-50, 50, size=(16, 256)).astype(np.int32)
+    want = _segcummax_oracle(x, seg)
+    for max_seg in (16, 17, None):
+        got = np.asarray(segmented_cummax(jnp.asarray(x), jnp.asarray(seg),
+                                          max_seg=max_seg, interpret=True))
+        assert (got == want).all(), max_seg
+
+
+def test_solve_chains_matches_numpy_seeded_solver():
+    """End-to-end sparse solve over exported flat arrays vs the numpy
+    Gauss-Seidel production solver, WAR edges active."""
+    from repro.core import simulate
+    from repro.core.dse import (_batch_arrays, _solve_block_numpy,
+                                _solve_sparse_jax)
+    from repro.core.incremental import compile_graph
+    from repro.designs.typea import skynet_like
+
+    base = simulate(skynet_like(items=16, depth=4))
+    g = compile_graph(base.graph)
+    ba = _batch_arrays(g)
+    rng = np.random.default_rng(2)
+    Db = rng.integers(1, 9, size=(8, len(base.depths))).astype(np.int64)
+    t_np, conv_np, _ = _solve_block_numpy(ba, Db)
+    t_jx, conv_jx, _ = _solve_sparse_jax(g, ba, Db)
+    assert (conv_np == conv_jx).all()
+    # converged configs: full (n, K) node-time agreement, not just cycles
+    cols = np.flatnonzero(conv_np)
+    assert (np.asarray(t_np)[:, cols] == t_jx[:, cols]).all()

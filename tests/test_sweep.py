@@ -95,6 +95,21 @@ def test_shard_modes_bit_identical():
     assert (outs[0].status == outs[1].status).all()
 
 
+def test_service_jax_backend_lane_bit_identical():
+    """backend="jax" shard lane: the sparse Pallas solver serves sweeps
+    with verdicts bit-identical to the numpy lane (deadlock rows, too)."""
+    pytest.importorskip("jax")
+    builder = lambda: skynet_like(items=32, depth=5)
+    base = simulate(builder())
+    rng = np.random.default_rng(11)
+    D = rng.integers(1, 10, size=(24, len(base.depths)))
+    ref = resimulate_batch(base, D)
+    with _manual_service(block=8, shards=2, backend="jax") as svc:
+        out = svc.sweep(builder(), D)
+    _assert_outcome_equal(out, ref, "jax lane")
+    assert (out.violated == ref.violated).all()
+
+
 @pytest.mark.service
 def test_process_shard_mode_bit_identical():
     """mode="process": workers hold their own unpickled CompiledGraph."""

@@ -55,7 +55,7 @@ from __future__ import annotations
 
 import heapq
 import types
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from itertools import repeat
 from typing import Any, Dict, List, Optional, Tuple
@@ -754,7 +754,7 @@ del _name
 # ---------------------------------------------------------------------------
 # Content-addressed design keys: warm-cache reuse of the pre-built graph
 # ---------------------------------------------------------------------------
-def _fp_update(h, obj, depth: int = 0) -> None:
+def _fp_update(h, obj, depth: int = 0, fifo_depth: bool = True) -> None:
     """Feed ``obj`` into hash ``h`` by *content*, not identity.
 
     Function objects are fingerprinted by bytecode + consts + defaults +
@@ -762,7 +762,9 @@ def _fp_update(h, obj, depth: int = 0) -> None:
     so two Programs built by the same builder with the same arguments hash
     equal even though every call allocates fresh function/Fifo objects,
     while changing any captured argument (``items=512`` vs ``1024``)
-    changes the key.
+    changes the key.  ``fifo_depth=False`` hashes captured FIFOs by name
+    only — the depth-insensitive flavor the hybrid segment cache keys on,
+    where depth perturbations are the intended reuse.
 
     Failure direction matters: unknown values must never make two
     *different* designs collide.  Past the recursion bound, and for
@@ -788,14 +790,14 @@ def _fp_update(h, obj, depth: int = 0) -> None:
         code = obj.__code__
         h.update(b"fn(")
         h.update(code.co_code)
-        _fp_update(h, code.co_consts, depth + 1)
+        _fp_update(h, code.co_consts, depth + 1, fifo_depth)
         h.update(repr(code.co_names).encode())
-        _fp_update(h, obj.__defaults__, depth + 1)
-        _fp_update(h, obj.__kwdefaults__, depth + 1)
+        _fp_update(h, obj.__defaults__, depth + 1, fifo_depth)
+        _fp_update(h, obj.__kwdefaults__, depth + 1, fifo_depth)
         if obj.__closure__:
             for cell in obj.__closure__:
                 try:
-                    _fp_update(h, cell.cell_contents, depth + 1)
+                    _fp_update(h, cell.cell_contents, depth + 1, fifo_depth)
                 except ValueError:
                     h.update(b"<empty>")
         # module-level state the body reads is design content too (a
@@ -809,30 +811,33 @@ def _fp_update(h, obj, depth: int = 0) -> None:
             if isinstance(v, types.ModuleType):
                 h.update(v.__name__.encode())
             else:
-                _fp_update(h, v, depth + 1)
+                _fp_update(h, v, depth + 1, fifo_depth)
         h.update(b")")
     elif isinstance(obj, types.CodeType):
         h.update(b"code(")
         h.update(obj.co_code)
-        _fp_update(h, obj.co_consts, depth + 1)
+        _fp_update(h, obj.co_consts, depth + 1, fifo_depth)
         h.update(repr(obj.co_names).encode())
         h.update(b")")
     elif isinstance(obj, Fifo):
-        h.update(f"Fifo({obj.name},{obj.depth})".encode())
+        if fifo_depth:
+            h.update(f"Fifo({obj.name},{obj.depth})".encode())
+        else:
+            h.update(f"Fifo({obj.name})".encode())
     elif isinstance(obj, np.ndarray):
         h.update(obj.tobytes())
     elif isinstance(obj, (list, tuple)):
         h.update(b"(" if isinstance(obj, tuple) else b"[")
         for x in obj:
-            _fp_update(h, x, depth + 1)
+            _fp_update(h, x, depth + 1, fifo_depth)
             h.update(b",")
         h.update(b"]")
     elif isinstance(obj, dict):
         h.update(b"{")
         for k in obj:
-            _fp_update(h, k, depth + 1)
+            _fp_update(h, k, depth + 1, fifo_depth)
             h.update(b":")
-            _fp_update(h, obj[k], depth + 1)
+            _fp_update(h, obj[k], depth + 1, fifo_depth)
         h.update(b"}")
     elif type(obj).__repr__ is object.__repr__:
         # default repr would embed the instance address (a new key every
@@ -840,7 +845,7 @@ def _fp_update(h, obj, depth: int = 0) -> None:
         # the attribute dict by content instead
         h.update(type(obj).__qualname__.encode())
         try:
-            _fp_update(h, vars(obj), depth + 1)
+            _fp_update(h, vars(obj), depth + 1, fifo_depth)
         except TypeError:                # __slots__ etc.: accept misses
             h.update(repr(obj).encode())
     else:
@@ -1078,6 +1083,7 @@ _VEC_MIN = 48          # pending-slice length above which the solver vectorizes
 _BATCH_MIN = 128       # total pending rows above which _solve_batch engages
 _POLL_STREAK = 3       # periodic failures before query periodization kicks in
 _CACHE_BULK_MIN = 4    # cached-row window length worth array dispatch
+_PARK_VEC_MIN = 24     # parked-query count above which pricing vectorizes
 
 
 class _GrowBuf:
@@ -1230,35 +1236,103 @@ class _RunArrays:
         self.emit_kv = emit_kv
 
 
+class _FullRun:
+    """One design's complete solved run, cached for bulk verified replay.
+
+    Stored by :meth:`HybridSim._finish` under the design's *content*
+    fingerprint (:func:`program_fingerprint` — FIFO names/depths plus
+    module bytecode, constants and closure values), so two designs share
+    an entry only when their generators are guaranteed to replay the same
+    yield streams.  A warm hit replays the whole run without touching a
+    single generator: every module's row arrays and committed times are
+    installed in bulk, then *verified* per entry against the claimed
+    tables (each row's time must equal ``max(chain, source + 1)`` and
+    each query outcome must match the Table-2 verdict it claims — the
+    dependency graph of a completed run is acyclic, so pointwise
+    fixpoint equality pins the unique solution).  Any mismatch rejects
+    the entry and falls back to the exact engine protocol.
+    """
+
+    __slots__ = ("kind", "fifo", "gap", "seq", "times", "end_gap", "cons",
+                 "outputs", "leftover", "reader_of", "writer_of", "stats",
+                 "n_rows")
+
+    def __init__(self, kind, fifo, gap, seq, times, end_gap, cons, outputs,
+                 leftover, reader_of, writer_of, stats, n_rows):
+        self.kind = kind              # per-module int64 row-opcode arrays
+        self.fifo = fifo              # per-module row fifo ids
+        self.gap = gap                # per-module row gaps
+        self.seq = seq                # per-module 1-based per-FIFO seqs
+        self.times = times            # per-module committed times
+        self.end_gap = end_gap        # per-module trailing gap
+        self.cons = cons              # (n, 6) query/constraint records
+        self.outputs = outputs
+        self.leftover = leftover      # per-fifo values left in the buffers
+        self.reader_of = reader_of
+        self.writer_of = writer_of
+        self.stats = stats            # semantic counters of the execution
+        self.n_rows = n_rows
+
+
 class HybridCache:
     """Cross-run segment memoization for the hybrid engine.
 
-    Keyed by the design *shape* (program name + FIFO/module name tuples) and
-    module id — **not** by FIFO depths, which is the point: repeated
-    simulations of the same design under perturbed depths
-    (``classify_dynamic``, DSE fallbacks) replay cached module streams and
-    re-run generators only past a genuine control-flow divergence.  Stores
-    up to ``max_variants`` outcome branches per module, most recent first.
+    Keyed by a depth-insensitive content :meth:`signature` (program name +
+    FIFO/module names + per-module bytecode/closure hash) and module id —
+    **not** by FIFO depths, which is the point: repeated simulations of
+    the same design under perturbed depths (``classify_dynamic``, DSE
+    fallbacks) replay cached module streams and re-run generators only
+    past a genuine control-flow divergence.  Stores up to ``max_variants``
+    outcome branches per module, most recent first.  A second layer keyed
+    by the full content fingerprint (depths included) holds complete
+    solved runs (:class:`_FullRun`) for bulk verified replay.
 
     Counters: ``hits`` (modules fully replayed without touching their
     generator), ``misses`` (no cached branch at run start), ``switches``
     (divergence repaired by another cached branch whose prefix re-converges)
-    and ``divergences`` (generator materialized and fast-forwarded).
+    and ``divergences`` (generator materialized and fast-forwarded);
+    ``full_hits`` / ``full_misses`` / ``full_rejects`` count the
+    whole-run layer.
     """
 
-    def __init__(self, max_variants: int = 6):
+    def __init__(self, max_variants: int = 6, max_full: int = 8):
         self.max_variants = max_variants
+        self.max_full = max_full
         self._runs: Dict[tuple, List[_CachedRun]] = {}
+        self._full: "OrderedDict[str, _FullRun]" = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.switches = 0
         self.divergences = 0
+        self.full_hits = 0            # whole runs replayed + verified in bulk
+        self.full_misses = 0
+        self.full_rejects = 0         # entries that failed verification
 
     @staticmethod
     def signature(program: Program) -> tuple:
+        """Depth-insensitive content key for the segment/variant cache.
+
+        Names alone are NOT enough: two builds of the same design with
+        different *builder arguments* (``branch(96)`` vs ``branch(160)``)
+        share every name, and a cached yield stream from one would replay
+        outcome-compatibly on the other right up to its early end — the
+        shorter run's results, silently.  Hashing each module's bytecode +
+        constants + captured closure values pins the control flow; FIFO
+        depths are deliberately excluded (captured FIFOs hash by name
+        only), because depth perturbations are exactly the reuse this
+        cache serves — divergence checking handles depth-induced outcome
+        changes, but it cannot see closure constants that shorten a loop.
+        """
+        import hashlib
+        h = hashlib.sha256()
+        for m in program.modules:
+            h.update(m.name.encode())
+            h.update(b"|")
+            _fp_update(h, m.fn, fifo_depth=False)
         return (program.name,
                 tuple(f.name for f in program.fifos),
-                tuple(m.name for m in program.modules))
+                tuple(m.name for m in program.modules),
+                h.hexdigest())
 
     def lookup(self, sig: tuple, mid: int) -> List[_CachedRun]:
         return self._runs.get((sig, mid), [])
@@ -1274,6 +1348,20 @@ class HybridCache:
             runs.remove(run)
             runs.insert(0, run)
 
+    def lookup_full(self, key: str) -> Optional[_FullRun]:
+        run = self._full.get(key)
+        if run is None:
+            self.full_misses += 1
+            return None
+        self._full.move_to_end(key)
+        return run
+
+    def store_full(self, key: str, run: _FullRun) -> None:
+        self._full[key] = run
+        self._full.move_to_end(key)
+        while len(self._full) > self.max_full:
+            self._full.popitem(last=False)
+
 
 class _HMod:
     """Per-module recorder state of the hybrid engine."""
@@ -1283,7 +1371,7 @@ class _HMod:
                  "park_fid", "qid", "q_code", "q_fifo", "q_seq", "q_payload",
                  "q_time", "cand", "cand_alts", "pos", "ylog", "sends",
                  "p_code", "p_fifo", "p_seq", "p_gap", "p_row", "streak",
-                 "burst", "pending_op")
+                 "burst", "pending_op", "p_hist", "pat", "pat_k")
 
     def __init__(self, mid: int, name: str):
         self.mid = mid
@@ -1322,6 +1410,12 @@ class _HMod:
         self.streak = 0
         self.burst = False            # detector armed a burst attempt
         self.pending_op = None        # yield fetched but not yet dispatched
+        # generalized periodic-pattern detector: recent consecutive NB query
+        # steps (code, fifo, gap, outcome), the armed repeating pattern
+        # tuple, and the index of the next expected step within it
+        self.p_hist: list = []
+        self.pat: Optional[tuple] = None
+        self.pat_k = 0
 
 
 class HybridSim:
@@ -1358,6 +1452,16 @@ class HybridSim:
         self.heap: List[Tuple[int, int, int]] = []   # (time, qid, mid)
         self.unpriced: set = set()
         self.solve_dirty: set = set()
+        self.pending: set = set()     # mids with recorded-but-untimed rows
+        self.n_done = 0               # modules in _H_DONE state
+        # parked-query watch slots: a read-side query's verdict can only
+        # flip when its FIFO's *write* table grows (and vice versa), and
+        # SPSC means at most one parked query watches each (fifo, side) —
+        # so every commit site can wake exactly the right parked queries
+        # and quiescence never rescans a heap nothing could have changed
+        self.qwatch_w = [-1] * n_fifo   # parked read-side query mid per fifo
+        self.qwatch_r = [-1] * n_fifo   # parked write-side query mid per fifo
+        self.rp_wake: set = set()       # parked mids whose table grew
         self.runq: deque = deque()
         self.queued = [False] * len(self.mods)
         self._qid = 0
@@ -1373,9 +1477,18 @@ class HybridSim:
         self.batch_solves = 0
         self._batch_futile = -1       # pending volume of the last no-commit
         #                               batch attempt (futility gate)
+        self._batch_backoff = 0       # pending volume below which the batch
+        #                               solver stays off (low-yield backoff)
         self.cache_bulk_rows = 0      # cached rows replayed array-at-a-time
+        self._full_replay = False     # this run was served by _replay_full
         if cache is not None:
             self.sig = HybridCache.signature(program)
+            # full content fingerprint for whole-run replay: the segment
+            # signature above deliberately ignores FIFO depths (divergence
+            # checking absorbs depth-induced outcome changes), but a bulk
+            # replay installs committed *times*, which depend on depths —
+            # its key must pin them too
+            self._fkey = program_fingerprint(program)
             for st in self.mods:
                 st.ylog, st.sends = [], []
                 st.cand_alts = cache.lookup(self.sig, st.mid)
@@ -1403,8 +1516,56 @@ class HybridSim:
             self.runq.append(mid)
 
     def _mark_dirty(self, mid: int) -> None:
+        # only modules with recorded-but-untimed rows can profit from a
+        # frontier retry; marking others would just break the empty-dirty
+        # fast paths (a module recording new rows later re-enters the
+        # worklist through ``self.pending``)
         if mid >= 0:
-            self.solve_dirty.add(mid)
+            st = self.mods[mid]
+            if len(st.kind) != len(st.times):
+                self.solve_dirty.add(mid)
+
+    # --------------------------------------------------- eager row timing
+    # When a module records a blocking row while its chain is timed up to
+    # that row (lock-step execution, the forced-poll ping-pong hot case),
+    # the row's time is computable immediately from the committed tables —
+    # same formula as the frontier, so committing it here instead of
+    # waiting for the next ``_solve`` changes nothing but when the work
+    # happens.  Rows whose RAW/WAR source is uncommitted simply stay
+    # pending and flow through the regular solver.
+    def _eager_read(self, st: _HMod, f: int, s: int) -> None:
+        wt = self.fw_times[f]
+        if s > wt.n:
+            return
+        times_l = st.times
+        t = (times_l[-1] if times_l else 0) + st.gap[-1]
+        c = int(wt.a[s - 1]) + 1
+        if c > t:
+            t = c
+        self.fr_times[f].append(t)
+        times_l.append(t)
+        self._mark_dirty(self.writer_of.get(f, -1))
+        w = self.qwatch_r[f]
+        if w >= 0:
+            self.rp_wake.add(w)
+
+    def _eager_write(self, st: _HMod, f: int, s: int) -> None:
+        tg = s - self.depths[f]
+        times_l = st.times
+        t = (times_l[-1] if times_l else 0) + st.gap[-1]
+        if tg > 0:
+            rt = self.fr_times[f]
+            if tg > rt.n:
+                return
+            c = int(rt.a[tg - 1]) + 1
+            if c > t:
+                t = c
+        self.fw_times[f].append(t)
+        times_l.append(t)
+        self._mark_dirty(self.reader_of.get(f, -1))
+        w = self.qwatch_w[f]
+        if w >= 0:
+            self.rp_wake.add(w)
 
     # ------------------------------------------------------- frontier solver
     def _advance_frontier(self, st: _HMod) -> bool:
@@ -1424,6 +1585,38 @@ class HybridSim:
         kind_l, fifo_l, gap_l, seq_l = st.kind, st.fifo, st.gap, st.seq
         fw, fr, depths = self.fw_times, self.fr_times, self.depths
         t_prev = times_l[lo - 1] if lo else 0
+        if hi - lo == 1:
+            # exactly one pending row — the write-before-poll / pipeline
+            # ping-pong hot case: commit it without touched-set bookkeeping
+            f = fifo_l[lo]
+            s = seq_l[lo]
+            t = t_prev + gap_l[lo]
+            if kind_l[lo] == OP_READ:
+                wt = fw[f]
+                if s > wt.n:
+                    return False
+                c = int(wt.a[s - 1]) + 1
+                if c > t:
+                    t = c
+                fr[f].append(t)
+                self._mark_dirty(self.writer_of.get(f, -1))
+                w = self.qwatch_r[f]
+            else:                                   # OP_WRITE
+                tg = s - depths[f]
+                if tg > 0:
+                    rt = fr[f]
+                    if tg > rt.n:
+                        return False
+                    c = int(rt.a[tg - 1]) + 1
+                    if c > t:
+                        t = c
+                fw[f].append(t)
+                self._mark_dirty(self.reader_of.get(f, -1))
+                w = self.qwatch_w[f]
+            if w >= 0:
+                self.rp_wake.add(w)
+            times_l.append(t)
+            return True
         touched_w: set = set()
         touched_r: set = set()
         # scalar pass over the first few pending rows: a frontier that
@@ -1463,10 +1656,20 @@ class HybridSim:
             # cummax in geometrically growing windows (each window is only
             # materialized as arrays once per visit)
             self._advance_frontier_np(st, hi, touched_r, touched_w)
-        for f in touched_w:
-            self._mark_dirty(self.reader_of.get(f, -1))
-        for f in touched_r:
-            self._mark_dirty(self.writer_of.get(f, -1))
+        if touched_w:
+            qw, wake = self.qwatch_w, self.rp_wake
+            for f in touched_w:
+                self._mark_dirty(self.reader_of.get(f, -1))
+                w = qw[f]
+                if w >= 0:
+                    wake.add(w)
+        if touched_r:
+            qr, wake = self.qwatch_r, self.rp_wake
+            for f in touched_r:
+                self._mark_dirty(self.writer_of.get(f, -1))
+                w = qr[f]
+                if w >= 0:
+                    wake.add(w)
         return len(times_l) > lo
 
     def _advance_frontier_np(self, st: _HMod, hi: int,
@@ -1554,7 +1757,8 @@ class HybridSim:
         fwn = np.fromiter((b.n for b in fw), np.int64, n_fifo)
         frn = np.fromiter((b.n for b in fr), np.int64, n_fifo)
         sts, kinds, fifos, gaps, seqs, t0s = [], [], [], [], [], []
-        for st in self.mods:
+        for mid in sorted(self.pending):
+            st = self.mods[mid]
             lo, hi = len(st.times), len(st.kind)
             if lo >= hi:
                 continue
@@ -1706,9 +1910,15 @@ class HybridSim:
                 m_r = rd & (f == fid)
                 if m_r.any():
                     fr[fid].extend(t[m_r])
+                    w = self.qwatch_r[fid]
+                    if w >= 0:
+                        self.rp_wake.add(w)
                 m_w = ~rd & (f == fid)
                 if m_w.any():
                     fw[fid].extend(t[m_w])
+                    w = self.qwatch_w[fid]
+                    if w >= 0:
+                        self.rp_wake.add(w)
             self.batch_rows += lim
         self.batch_solves += 1
         return True
@@ -1716,20 +1926,27 @@ class HybridSim:
     def _solve(self) -> bool:
         """Run the frontier solvers to fixpoint over the dirty-module set.
 
-        Seeds the worklist with every module that has pending (recorded but
-        untimed) rows — a handful of length checks, cheaper than per-op
-        dirty marking in the recorder hot loop.  Large pending volumes go
-        through the provisional-times batch solver first
-        (:meth:`_solve_batch`); the scalar frontier mops up the remainder
-        and is the sole path when the batch solver bails (WAR cycles).
+        Seeds the worklist from ``self.pending`` — the incrementally
+        maintained set of modules with recorded-but-untimed rows (updated
+        by the run loop after every activation and by ``_issue_query``) —
+        so a solve costs O(pending modules), not a scan of every module in
+        the design.  Large pending volumes go through the provisional-times
+        batch solver first (:meth:`_solve_batch`); the scalar frontier mops
+        up the remainder and is the sole path when the batch solver bails
+        (WAR cycles).
         """
         dirty = self.solve_dirty
+        pend = self.pending
+        if not pend and not dirty:
+            return False
+        mods = self.mods
         pending = 0
-        for st in self.mods:
+        for mid in pend:
+            st = mods[mid]
             d = len(st.kind) - len(st.times)
             if d > 0:
                 pending += d
-                dirty.add(st.mid)
+                dirty.add(mid)
         changed = False
         # Futility gate: when a batch attempt committed nothing (every
         # window truncated to zero — e.g. most modules parked for good in a
@@ -1738,16 +1955,35 @@ class HybridSim:
         # scalar frontier below computes the identical fixpoint in small
         # hops, so skipping the batch can never change results — only
         # which solver commits the rows.
-        if pending >= self.batch_min > 0 and pending != self._batch_futile:
+        if (pending >= self.batch_min > 0 and pending != self._batch_futile
+                and pending >= self._batch_backoff):
+            rows0 = self.batch_rows
             if self._solve_batch():
                 changed = True
                 self._batch_futile = -1
+                got = self.batch_rows - rows0
+                # Low-yield backoff: when a large system is rebuilt only to
+                # commit a trickle of rows (run-ahead recording throttled by
+                # WAR on lazily-committing NB reads), the next attempt at a
+                # similar volume rebuilds the same system.  Hold the batch
+                # solver off until the pending volume has grown past the
+                # uncommitted remainder by a full batch quantum; the scalar
+                # frontier commits the trickle at O(rows) in the meantime.
+                if got * 4 < pending:
+                    self._batch_backoff = pending - got + self.batch_min
+                else:
+                    self._batch_backoff = 0
             else:
                 self._batch_futile = pending
         while dirty:
-            st = self.mods[dirty.pop()]
+            st = mods[dirty.pop()]
             if self._advance_frontier(st):
                 changed = True
+        if pend:
+            done = [mid for mid in pend
+                    if len(mods[mid].times) == len(mods[mid].kind)]
+            for mid in done:
+                pend.discard(mid)
         return changed
 
     # --------------------------------------------------------------- queries
@@ -1774,12 +2010,20 @@ class HybridSim:
         row = len(st.kind)
         self.constraints.append((code, f, s, st.mid, row, outcome))
         payload = st.q_payload
+        # the query is resolving: retire its (fifo, side) watch slot
+        if _QC_IS_READ_SIDE[code]:
+            self.qwatch_w[f] = -1
+        else:
+            self.qwatch_r[f] = -1
         if code == _QC_READ_NB:
             if outcome:
                 v = self.buffers[f].popleft()
                 st.kind.append(OP_READ_NB)
                 self.rseq[f] = s
                 self.fr_times[f].append(t)
+                w = self.qwatch_r[f]
+                if w >= 0:
+                    self.rp_wake.add(w)
                 self._mark_dirty(self.writer_of.get(f, -1))
                 st.send = (True, v)
             else:
@@ -1791,6 +2035,9 @@ class HybridSim:
                 st.kind.append(OP_WRITE_NB)
                 self.wseq[f] = s
                 self.fw_times[f].append(t)
+                w = self.qwatch_w[f]
+                if w >= 0:
+                    self.rp_wake.add(w)
                 self._mark_dirty(self.reader_of.get(f, -1))
                 self.buffers[f].append(payload)
                 w = self.waiting_reader.pop(f, None)
@@ -1813,21 +2060,71 @@ class HybridSim:
         st.gap_acc = 1
         st.q_payload = None
         st.state = _H_READY
-        # ---- steady-state poll-loop detector (query periodization): a
-        # streak of >= _POLL_STREAK consecutive failures at the same site,
-        # with the same gap and no commits in between, arms a burst attempt
-        if outcome:
-            st.streak = 0
-        else:
-            if (row == st.p_row + 1 and code == st.p_code
-                    and f == st.p_fifo and s == st.p_seq and g == st.p_gap):
+        # ---- steady-state periodic-pattern detector (query periodization).
+        # Single-site all-fail streaks (>= _POLL_STREAK consecutive failures
+        # at one site, same gap, no commits in between) keep the dedicated
+        # closed-form burst path (_poll_horizon/_burst_polls).  Everything
+        # else that repeats — multi-site poll rotations, steady NB success
+        # streams, mixed fail/success periods — arms a generalized pattern
+        # tuple of (code, fifo, gap, outcome) steps consumed by
+        # _burst_pattern.  Steps must be row-consecutive queries: any
+        # blocking row in between resets both detectors.
+        if self.periodize:
+            consec = row == st.p_row + 1
+            st.p_row = row
+            if outcome:
+                st.streak = 0
+            elif (consec and code == st.p_code and f == st.p_fifo
+                    and s == st.p_seq and g == st.p_gap):
                 st.streak += 1
-                if st.streak >= _POLL_STREAK and self.periodize:
+                if st.streak >= _POLL_STREAK and st.pat is None:
                     st.burst = True
             else:
                 st.p_code, st.p_fifo, st.p_seq, st.p_gap = code, f, s, g
                 st.streak = 1
-            st.p_row = row
+            if code <= _QC_WRITE_NB:
+                step = (code, f, g, outcome)
+                pat = st.pat
+                hist = st.p_hist
+                if pat is not None and consec:
+                    if step == pat[st.pat_k]:
+                        k2 = st.pat_k + 1
+                        if k2 == len(pat):
+                            st.pat_k = 0
+                            st.burst = True
+                        else:
+                            st.pat_k = k2
+                    else:                     # pattern broke: re-detect
+                        st.pat = None
+                        hist.clear()
+                        hist.append(step)
+                else:
+                    if pat is not None:       # non-consecutive row: disarm
+                        st.pat = None
+                        hist.clear()
+                    elif not consec:
+                        hist.clear()
+                    hist.append(step)
+                    L = len(hist)
+                    if L > 12:                # 3 periods of the max P == 4
+                        del hist[0]
+                        L = 12
+                    for P in (1, 2, 3, 4):    # arm the shortest period seen
+                        if L < 3 * P:         # need 3 observed periods
+                            break
+                        for i in range(1, 2 * P + 1):
+                            if hist[-i] != hist[-i - P]:
+                                break
+                        else:
+                            if P == 1 and not outcome:
+                                break         # single-site all-fail: streak
+                            st.pat = tuple(hist[-P:])
+                            st.pat_k = 0
+                            st.burst = True
+                            break
+            elif st.pat is not None or st.p_hist:
+                st.pat = None                 # used probes break NB patterns
+                st.p_hist.clear()
         op_code = (OP_READ_NB, OP_WRITE_NB, OP_EMPTY, OP_FULL)[code]
         if st.cand is not None:
             want = (st.cand.ylog[st.pos][2]
@@ -2033,6 +2330,7 @@ class HybridSim:
             except StopIteration:
                 st.state = _H_DONE
                 st.end_gap = st.gap_acc
+                self.n_done += 1
                 stopped = True
             self.steps += n_send
             if k:
@@ -2062,6 +2360,359 @@ class HybridSim:
                 f"livelock — neither OmniSim nor co-sim detects livelock")
         return False
 
+    def _pattern_horizon(self, st: _HMod) -> int:
+        """Number of full periods of ``st.pat`` whose verdicts are all
+        derivable from the committed time tables right now.
+
+        Generalizes :meth:`_poll_horizon` to multi-site patterns and
+        success steps.  Step ``j`` of period ``m`` prices at
+        ``t0 + m*p + offs[j]`` and accesses per-FIFO seq
+        ``b + m*d + pre[j]`` (``d`` = successes per period at that
+        (fifo, side), ``pre[j]`` = successes at it earlier in the period),
+        so each step's verdict window is a closed form (constant-seq
+        failures against one immutable commit time) or one vectorized
+        compare against the ``fw_times``/``fr_times`` arrays.  The burst
+        horizon is the min over steps — conservative by construction:
+        only pre-burst table entries are consulted, and committed times
+        are immutable, so every admitted verdict is exact.
+        """
+        pat = st.pat
+        P = len(pat)
+        offs = []
+        acc = 0
+        for (_c, _f, g, _o) in pat:
+            acc += g
+            offs.append(acc)
+        p = acc
+        if p <= 0:
+            return 0
+        t0 = st.times[-1]
+        d_map: Dict[Tuple[int, int], int] = {}
+        pre = []
+        for (c, f, _g, o) in pat:
+            key = (f, c & 1)
+            pre.append(d_map.get(key, 0))
+            if o:
+                d_map[key] = d_map.get(key, 0) + 1
+        M = 1 << 16                  # caps the vectorized window per burst
+        for j, (c, f, _g, o) in enumerate(pat):
+            d = d_map.get((f, c & 1), 0)
+            off = offs[j]
+            if c == _QC_READ_NB:
+                b = self.rseq[f] + 1 + pre[j]
+                wt = self.fw_times[f]
+                if o:
+                    if d <= 0:
+                        return 0
+                    avail = (wt.n - b) // d + 1 if wt.n >= b else 0
+                    cap = min(M, avail)
+                    if cap <= 0:
+                        return 0
+                    m = np.arange(cap, dtype=np.int64)
+                    ok = wt.a[b + m * d - 1] < t0 + m * p + off
+                    c_j = cap if ok.all() else int(np.argmin(ok))
+                elif d == 0:
+                    if b > wt.n:
+                        return 0     # undecidable: forced rule must handle
+                    c_j = (int(wt.a[b - 1]) - t0 - off) // p + 1
+                else:
+                    avail = (wt.n - b) // d + 1 if wt.n >= b else 0
+                    cap = min(M, avail)
+                    if cap <= 0:
+                        return 0
+                    m = np.arange(cap, dtype=np.int64)
+                    ok = wt.a[b + m * d - 1] >= t0 + m * p + off
+                    c_j = cap if ok.all() else int(np.argmin(ok))
+            else:                                   # _QC_WRITE_NB
+                b = self.wseq[f] + 1 + pre[j]
+                dep = self.depths[f]
+                rt = self.fr_times[f]
+                if o:
+                    if d <= 0:
+                        return 0
+                    # tg(m) = b + m*d - dep: True while tg <= 0, then needs
+                    # the committed WAR-target read time to precede t(m)
+                    m0 = (dep - b) // d + 1 if dep >= b else 0
+                    avail = ((rt.n + dep - b) // d + 1
+                             if rt.n + dep >= b else 0)
+                    cap = min(M, avail)
+                    if cap <= 0:
+                        return 0
+                    if cap <= m0:
+                        c_j = cap
+                    else:
+                        m = np.arange(m0, cap, dtype=np.int64)
+                        tg = b + m * d - dep
+                        ok = rt.a[tg - 1] < t0 + m * p + off
+                        c_j = m0 + (len(m) if ok.all()
+                                    else int(np.argmin(ok)))
+                elif d == 0:
+                    tg = b - dep
+                    if tg <= 0 or tg > rt.n:
+                        return 0
+                    c_j = (int(rt.a[tg - 1]) - t0 - off) // p + 1
+                else:
+                    if b - dep <= 0:
+                        return 0     # next verdict is True, not the fail
+                    avail = ((rt.n + dep - b) // d + 1
+                             if rt.n + dep >= b else 0)
+                    cap = min(M, avail)
+                    if cap <= 0:
+                        return 0
+                    m = np.arange(cap, dtype=np.int64)
+                    tg = b + m * d - dep
+                    ok = rt.a[tg - 1] >= t0 + m * p + off
+                    c_j = cap if ok.all() else int(np.argmin(ok))
+            if c_j < M:
+                M = c_j
+                if M <= 0:
+                    return 0
+        return M
+
+    def _burst_pattern(self, st: _HMod) -> bool:
+        """Resolve full periods of the armed pattern in one burst.
+
+        The multi-site / success-stream counterpart of
+        :meth:`_burst_polls`: the horizon fixes every step's verdict in
+        advance, and the module's stream is advanced through a per-step
+        verification loop that admits only the recorded pattern — same
+        query class, site and gap, timing-only body ops absorbed.  Success
+        steps commit for real as they verify (buffer pops/pushes, seq
+        bumps, ``fw``/``fr`` appends at the closed-form step times), so a
+        divergence stops the burst *before* the off-pattern yield commits
+        and results stay bit-identical.  Returns True when the module
+        terminated during the burst.
+        """
+        if st.pending_op is not None:
+            return False
+        pat = st.pat
+        P = len(pat)
+        M = self._pattern_horizon(st)
+        if M <= 0:
+            return False
+        K = M * P
+        buffers = self.buffers
+        rseq, wseq = self.rseq, self.wseq
+        fw, fr = self.fw_times, self.fr_times
+        cons = self.constraints
+        kind_l, fifo_l, gap_l = st.kind, st.fifo, st.gap
+        seq_l, times_l = st.seq, st.times
+        mid = st.mid
+        t = times_l[-1]
+        touched_r: set = set()
+        touched_w: set = set()
+        k = 0
+        stopped = False
+        if st.cand is not None:
+            # cached-branch arm: verify ylog entries against the pattern
+            # and the live buffers; any mismatch (including a value
+            # mismatch on a success) stops the burst and hands the entry
+            # to the normal cached dispatch, which re-verifies and
+            # diverges properly
+            ylog = st.cand.ylog
+            L = len(ylog)
+            pos = st.pos
+            probes_total = 0
+            n_ent = 0
+            while k < K:
+                g_extra, probes, npos = 0, 0, pos
+                while npos < L:
+                    e = ylog[npos]
+                    c0 = e[0]
+                    if c0 == OP_DELAY:
+                        g_extra += e[2]
+                    elif c0 == OP_PROBE_DEAD:
+                        g_extra += 1
+                        probes += 1
+                    else:
+                        break
+                    npos += 1
+                if npos >= L:
+                    break
+                code_j, f_j, g_j, out_j = pat[k % P]
+                op_code = OP_READ_NB if code_j == _QC_READ_NB else OP_WRITE_NB
+                e = ylog[npos]
+                if (e[0] != op_code or e[1] != f_j
+                        or st.gap_acc + g_extra != g_j):
+                    break
+                pay = e[2]
+                if type(pay) is not tuple or pay[0] is not out_j:
+                    break
+                if code_j == _QC_READ_NB:
+                    s = rseq[f_j] + 1
+                    if out_j:
+                        buf = buffers[f_j]
+                        if not buf or buf[0] != pay[1]:
+                            break             # value divergence: fall back
+                        v = buf.popleft()
+                        rseq[f_j] = s
+                        fr[f_j].append(t + g_j)
+                        touched_r.add(f_j)
+                        kind_l.append(OP_READ_NB)
+                        st.send = (True, v)
+                    else:
+                        kind_l.append(OP_NB_FAIL)
+                        st.send = (False, None)
+                else:
+                    s = wseq[f_j] + 1
+                    if out_j:
+                        wseq[f_j] = s
+                        fw[f_j].append(t + g_j)
+                        touched_w.add(f_j)
+                        buffers[f_j].append(pay[1])
+                        kind_l.append(OP_WRITE_NB)
+                        st.send = True
+                    else:
+                        kind_l.append(OP_NB_FAIL)
+                        st.send = False
+                t += g_j
+                st.gap_acc = 1
+                cons.append((code_j, f_j, s, mid, len(times_l), out_j))
+                fifo_l.append(f_j)
+                gap_l.append(g_j)
+                seq_l.append(s)
+                times_l.append(t)
+                probes_total += probes
+                n_ent += npos + 1 - pos
+                pos = npos + 1
+                k += 1
+            self.steps += n_ent
+            self.skipped_probes += probes_total
+            st.pos = pos
+            diverged = k < K
+        else:
+            # live-generator arm
+            gen = st.gen
+            gen_send = gen.send
+            log = st.ylog is not None
+            send = st.send
+            budget = self.max_steps - self.steps
+            n_send = 0
+            try:
+                while k < K:
+                    op = gen_send(send)
+                    n_send += 1
+                    if n_send > budget:
+                        raise RuntimeError(
+                            f"step budget exceeded ({self.max_steps}); "
+                            f"possible livelock — neither OmniSim nor "
+                            f"co-sim detects livelock")
+                    send = None
+                    cls = op.__class__
+                    while True:    # timing-only body ops keep the pattern
+                        if cls is Delay:
+                            st.gap_acc += op.cycles
+                            if log:
+                                st.ylog.append((OP_DELAY, -1, op.cycles))
+                                st.sends.append(None)
+                        elif cls is Emit:
+                            self.outputs[op.key] = op.value
+                            if log:
+                                st.ylog.append((OP_EMIT, -1,
+                                                (op.key, op.value)))
+                                st.sends.append(None)
+                        elif (cls is Empty or cls is Full) and not op.used:
+                            self.skipped_probes += 1
+                            st.gap_acc += 1
+                            if log:
+                                st.ylog.append((OP_PROBE_DEAD, op.fifo.fid,
+                                                None))
+                                st.sends.append(None)
+                        else:
+                            break
+                        op = gen_send(None)
+                        n_send += 1
+                        if n_send > budget:
+                            raise RuntimeError(
+                                f"step budget exceeded ({self.max_steps}); "
+                                f"possible livelock — neither OmniSim nor "
+                                f"co-sim detects livelock")
+                        cls = op.__class__
+                    code_j, f_j, g_j, out_j = pat[k % P]
+                    qcls = ReadNB if code_j == _QC_READ_NB else WriteNB
+                    if (cls is not qcls or op.fifo.fid != f_j
+                            or st.gap_acc != g_j):
+                        st.pending_op = op
+                        break
+                    t += g_j
+                    st.gap_acc = 1
+                    if code_j == _QC_READ_NB:
+                        s = rseq[f_j] + 1
+                        if out_j:
+                            v = buffers[f_j].popleft()
+                            rseq[f_j] = s
+                            fr[f_j].append(t)
+                            touched_r.add(f_j)
+                            kind_l.append(OP_READ_NB)
+                            send = (True, v)
+                        else:
+                            kind_l.append(OP_NB_FAIL)
+                            send = (False, None)
+                        if log:
+                            st.ylog.append((OP_READ_NB, f_j, send))
+                            st.sends.append(send)
+                    else:
+                        s = wseq[f_j] + 1
+                        pay = op.value
+                        if out_j:
+                            wseq[f_j] = s
+                            fw[f_j].append(t)
+                            touched_w.add(f_j)
+                            buffers[f_j].append(pay)
+                            kind_l.append(OP_WRITE_NB)
+                            send = True
+                        else:
+                            kind_l.append(OP_NB_FAIL)
+                            send = False
+                        if log:
+                            st.ylog.append((OP_WRITE_NB, f_j, (out_j, pay)))
+                            st.sends.append(send)
+                    cons.append((code_j, f_j, s, mid, len(times_l), out_j))
+                    fifo_l.append(f_j)
+                    gap_l.append(g_j)
+                    seq_l.append(s)
+                    times_l.append(t)
+                    k += 1
+                else:
+                    st.send = send
+                if st.pending_op is not None:
+                    st.send = None
+            except StopIteration:
+                st.state = _H_DONE
+                st.end_gap = st.gap_acc
+                self.n_done += 1
+                stopped = True
+            self.steps += n_send
+            diverged = st.pending_op is not None
+        # table growth during the burst wakes exactly like the frontier
+        for f_j in touched_r:
+            self._mark_dirty(self.writer_of.get(f_j, -1))
+            w = self.qwatch_r[f_j]
+            if w >= 0:
+                self.rp_wake.add(w)
+        for f_j in touched_w:
+            self._mark_dirty(self.reader_of.get(f_j, -1))
+            w = self.qwatch_w[f_j]
+            if w >= 0:
+                self.rp_wake.add(w)
+            wr = self.waiting_reader.pop(f_j, None)
+            if wr is not None:
+                self._enqueue(wr)
+        if k:
+            self.queries += k
+            self.bursts += 1
+            self.bulk_queries += k
+            st.p_row = len(kind_l) - 1
+        if diverged and not stopped:
+            st.pat = None
+            st.p_hist.clear()
+            st.streak = 0
+        if self.steps > self.max_steps:
+            raise RuntimeError(
+                f"step budget exceeded ({self.max_steps}); possible "
+                f"livelock — neither OmniSim nor co-sim detects livelock")
+        return stopped
+
     def _force_earliest(self) -> None:
         """Earliest-query forced-false rule (paper Sec. 7.1).
 
@@ -2085,7 +2736,19 @@ class HybridSim:
 
     def _resolve_parked(self) -> bool:
         """At quiescence: price newly-solvable queries, then resolve every
-        currently-definitive one earliest-first (engine step ❹)."""
+        currently-definitive one earliest-first (engine step ❹).
+
+        Gated on the watch slots: a parked verdict can only flip from
+        undecidable when its target table grows, every commit site wakes
+        the (unique, by SPSC) watcher of the grown (fifo, side), and
+        unpriced queries can only price after their own chain advanced —
+        so a phase in which no watched table grew and nothing is unpriced
+        is two set checks, not a heap scan.  That is the common case on
+        forced-false-heavy designs, where each phase forces exactly one
+        query.  Past the gate, resolution drains the heap scalar-wise
+        below :data:`_PARK_VEC_MIN` parked queries and through the
+        vectorized numpy pricer above it.
+        """
         if self.unpriced:
             for mid in sorted(self.unpriced):
                 st = self.mods[mid]
@@ -2097,12 +2760,22 @@ class HybridSim:
                     st.q_time = t
                     self.unpriced.discard(mid)
                     heapq.heappush(self.heap, (t, st.qid, mid))
+                    self.rp_wake.add(mid)   # first verdict check is here
+        if not self.rp_wake:
+            return False
+        self.rp_wake.clear()
+        heap = self.heap
+        if not heap:
+            return False
+        if len(heap) >= _PARK_VEC_MIN:
+            return self._resolve_parked_np()
+        mods = self.mods
         resolved = False
         remaining: List[Tuple[int, int, int]] = []
-        while self.heap:
-            entry = heapq.heappop(self.heap)
+        while heap:
+            entry = heapq.heappop(heap)
             t, qid, mid = entry
-            st = self.mods[mid]
+            st = mods[mid]
             if st.state != _H_PARK_QUERY or st.qid != qid:
                 continue
             v = self._verdict(st.q_code, st.q_fifo, st.q_seq, t)
@@ -2114,6 +2787,72 @@ class HybridSim:
             resolved = True
         self.heap = remaining        # drained in heap order -> still a heap
         return resolved
+
+    def _resolve_parked_np(self) -> bool:
+        """Vectorized parked-query resolution for wide designs.
+
+        One pass builds flat arrays of every live parked query and prices
+        all verdicts against the ``fw_times``/``fr_times`` numpy tables at
+        once (per-unique-FIFO gathers), instead of a heappop + per-query
+        ``_verdict`` round trip per entry — the ``_solve_batch`` move
+        applied to engine step ❹.  Verdicts decided against the pre-pass
+        tables are identical to the sequential drain's (committed times
+        are immutable, so a decided verdict can never change); queries
+        that only become decidable from commits made *during* this pass
+        resolve on the next quiescence round with the same outcome.
+        """
+        heap = self.heap
+        mods = self.mods
+        n = len(heap)
+        t_a = np.zeros(n, dtype=np.int64)
+        qid_a = np.zeros(n, dtype=np.int64)
+        code_a = np.zeros(n, dtype=np.int64)
+        fifo_a = np.zeros(n, dtype=np.int64)
+        seq_a = np.zeros(n, dtype=np.int64)
+        live = np.zeros(n, dtype=bool)
+        for i, (t, qid, mid) in enumerate(heap):
+            st = mods[mid]
+            if st.state != _H_PARK_QUERY or st.qid != qid:
+                continue
+            live[i] = True
+            t_a[i] = t
+            qid_a[i] = qid
+            code_a[i] = st.q_code
+            fifo_a[i] = st.q_fifo
+            seq_a[i] = st.q_seq
+        if not live.any():
+            self.heap = []
+            return False
+        n_fifo = len(self.depths)
+        fwn = np.fromiter((b.n for b in self.fw_times), np.int64, n_fifo)
+        frn = np.fromiter((b.n for b in self.fr_times), np.int64, n_fifo)
+        dep = np.asarray(self.depths, dtype=np.int64)
+        rs = (code_a % 2) == 0        # _QC_READ_NB / _QC_EMPTY are read-side
+        out = np.zeros(n, dtype=bool)
+        m_r = live & rs & (seq_a <= fwn[fifo_a])
+        for f in np.unique(fifo_a[m_r]):
+            mm = m_r & (fifo_a == f)
+            out[mm] = self.fw_times[f].a[seq_a[mm] - 1] < t_a[mm]
+        tg = seq_a - dep[fifo_a]
+        m_w0 = live & ~rs & (tg <= 0)
+        out[m_w0] = True
+        m_w = live & ~rs & (tg > 0) & (tg <= frn[fifo_a])
+        for f in np.unique(fifo_a[m_w]):
+            mm = m_w & (fifo_a == f)
+            out[mm] = self.fr_times[f].a[tg[mm] - 1] < t_a[mm]
+        dec = m_r | m_w0 | m_w
+        idx = np.flatnonzero(dec)
+        if not len(idx):
+            return False              # heap untouched: every live entry kept
+        order = idx[np.lexsort((qid_a[idx], t_a[idx]))]
+        for i in order:
+            mid = heap[i][2]
+            self._apply_query(mods[mid], bool(out[i]))
+            self._enqueue(mid)
+        kept = [heap[i] for i in np.flatnonzero(live & ~dec)]
+        heapq.heapify(kept)
+        self.heap = kept
+        return True
 
     # -------------------------------------------------------- cache plumbing
     # Invariants: while ``st.cand`` is set, the module's processed yield
@@ -2283,27 +3022,58 @@ class HybridSim:
     def _issue_query(self, st: _HMod, code: int, f: int, payload) -> bool:
         """Handle a query op; True if resolved inline (task may continue)."""
         self.queries += 1
-        self._check_endpoint(f, st.mid, not _QC_IS_READ_SIDE[code])
-        s = (self.rseq[f] if _QC_IS_READ_SIDE[code] else self.wseq[f]) + 1
+        read_side = _QC_IS_READ_SIDE[code]
+        self._check_endpoint(f, st.mid, not read_side)
+        s = (self.rseq[f] if read_side else self.wseq[f]) + 1
         st.q_code, st.q_fifo, st.q_seq, st.q_payload = code, f, s, payload
         if len(st.times) != len(st.kind):
-            # chain not timed up to the query: try to close the gap now
-            self._solve()
+            # chain not timed up to the query: try to close the gap now.
+            # When no other module has pending rows and nothing is dirty,
+            # this module's own frontier is the entire fixpoint (its
+            # sources are all committed or unrecorded) — skip the solver
+            # wrapper and batch gate
+            if not self.pending and not self.solve_dirty:
+                self._advance_frontier(st)
+                if len(st.times) != len(st.kind):
+                    self.pending.add(st.mid)
+                    self._solve()
+            else:
+                self.pending.add(st.mid)
+                self._solve()
         if len(st.times) == len(st.kind):
             t = (st.times[-1] if st.times else 0) + st.gap_acc
             st.q_time = t
-            v = self._verdict(code, f, s, t)
-            if v is not None:
-                self._apply_query(st, v)
-                return True
+            # inlined _verdict (hot path: most queries price right here)
+            if read_side:
+                wt = self.fw_times[f]
+                if s <= wt.n:
+                    self._apply_query(st, bool(wt.a[s - 1] < t))
+                    return True
+            else:
+                tg = s - self.depths[f]
+                if tg <= 0:
+                    self._apply_query(st, True)
+                    return True
+                rt = self.fr_times[f]
+                if tg <= rt.n:
+                    self._apply_query(st, bool(rt.a[tg - 1] < t))
+                    return True
             self._qid += 1
             st.qid = self._qid
             st.state = _H_PARK_QUERY
+            if read_side:
+                self.qwatch_w[f] = st.mid
+            else:
+                self.qwatch_r[f] = st.mid
             heapq.heappush(self.heap, (t, st.qid, st.mid))
             return False
         self._qid += 1
         st.qid = self._qid
         st.state = _H_PARK_QUERY
+        if read_side:
+            self.qwatch_w[f] = st.mid
+        else:
+            self.qwatch_r[f] = st.mid
         self.unpriced.add(st.mid)
         return False
 
@@ -2350,6 +3120,8 @@ class HybridSim:
             st.send = v
             st.park_fid = -1
             st.state = _H_READY
+            if len(st.kind) - len(st.times) == 1:
+                self._eager_read(st, f, s)
         steps = self.steps
         max_steps = self.max_steps
         try:
@@ -2358,9 +3130,13 @@ class HybridSim:
                 if st.burst:
                     st.burst = False
                     self.steps = steps
-                    K = self._poll_horizon(st)
-                    if K > 0 and self._burst_polls(st, K):
-                        return
+                    if st.pat is not None:
+                        if self._burst_pattern(st):
+                            return
+                    else:
+                        K = self._poll_horizon(st)
+                        if K > 0 and self._burst_polls(st, K):
+                            return
                     steps = self.steps
                 # ---- fetch the next yielded op (cached stream or generator)
                 steps += 1
@@ -2374,6 +3150,7 @@ class HybridSim:
                     if st.pos >= len(cand.ylog):
                         st.state = _H_DONE
                         st.end_gap = st.gap_acc
+                        self.n_done += 1
                         if self.cache is not None:
                             self.cache.hits += 1
                             self.cache.promote(self.sig, mid, cand)
@@ -2414,6 +3191,8 @@ class HybridSim:
                         sapp(s)
                         st.gap_acc = 1
                         st.send = v
+                        if len(st.kind) - len(st.times) == 1:
+                            self._eager_read(st, f, s)
                     elif code == OP_WRITE:
                         if writer_of.setdefault(f, mid) != mid:
                             raise self._unsup(
@@ -2427,6 +3206,8 @@ class HybridSim:
                         gapp(st.gap_acc)
                         sapp(s)
                         st.gap_acc = 1
+                        if len(st.kind) - len(st.times) == 1:
+                            self._eager_write(st, f, s)
                         buffers[f].append(payload)
                         if waiting_reader:
                             w = waiting_reader.pop(f, None)
@@ -2470,6 +3251,7 @@ class HybridSim:
                     except StopIteration:
                         st.state = _H_DONE
                         st.end_gap = st.gap_acc
+                        self.n_done += 1
                         return
                 st.send = None
                 cls = op.__class__
@@ -2502,6 +3284,8 @@ class HybridSim:
                     sapp(s)
                     st.gap_acc = 1
                     st.send = v
+                    if len(st.kind) - len(st.times) == 1:
+                        self._eager_read(st, f, s)
                     if log:
                         self._log(st, OP_READ, f, v)
                         st.sends.append(v)
@@ -2518,6 +3302,8 @@ class HybridSim:
                     gapp(st.gap_acc)
                     sapp(s)
                     st.gap_acc = 1
+                    if len(st.kind) - len(st.times) == 1:
+                        self._eager_write(st, f, s)
                     buffers[f].append(op.value)
                     if waiting_reader:
                         w = waiting_reader.pop(f, None)
@@ -2552,23 +3338,167 @@ class HybridSim:
         finally:
             self.steps = steps
 
+    # ------------------------------------------------ whole-run cached replay
+    def _replay_full(self, full: _FullRun) -> bool:
+        """Bulk-replay a cached complete run with per-entry verification.
+
+        Phase 1 verifies, touching no engine state: every row's committed
+        time must equal ``max(t_prev + gap, source + 1)`` against the
+        claimed per-FIFO tables (query rows carry no source: their time
+        must be chain-exact), and every recorded query outcome must match
+        the Table-2 verdict those tables imply.  A completed run's
+        dependency graph is acyclic, so pointwise fixpoint equality pins
+        the unique solution — any corruption or semantic drift rejects
+        the entry.  Phase 2 installs the arrays and counters; the caller
+        then finishes through the ordinary :meth:`_finish`.
+        """
+        mods = self.mods
+        n_mod = len(mods)
+        depths = self.depths
+        n_fifo = len(depths)
+        kinds, fifos, gaps = full.kind, full.fifo, full.gap
+        seqs, times = full.seq, full.times
+        # ---- claimed per-FIFO tables (SPSC: row order == seq order)
+        fw_tab: List[Optional[np.ndarray]] = [None] * n_fifo
+        fr_tab: List[Optional[np.ndarray]] = [None] * n_fifo
+        for f, mid in full.writer_of.items():
+            k = kinds[mid]
+            m = ((k == OP_WRITE) | (k == OP_WRITE_NB)) & (fifos[mid] == f)
+            fw_tab[f] = times[mid][m]
+        for f, mid in full.reader_of.items():
+            k = kinds[mid]
+            m = ((k == OP_READ) | (k == OP_READ_NB)) & (fifos[mid] == f)
+            fr_tab[f] = times[mid][m]
+        # ---- per-row time verification: t == max(chain, source + 1)
+        for mid in range(n_mod):
+            k = kinds[mid]
+            n = len(k)
+            if n == 0:
+                continue
+            fo, g, s, t = fifos[mid], gaps[mid], seqs[mid], times[mid]
+            c = np.full(n, NEGI, dtype=np.int64)
+            rd = k == OP_READ
+            if rd.any():
+                for f in np.unique(fo[rd]):
+                    m = rd & (fo == f)
+                    tab = fw_tab[f]
+                    sv = s[m]
+                    if tab is None or sv[-1] > len(tab):
+                        return False          # blocking read never satisfied
+                    c[m] = tab[sv - 1] + 1
+            wr = k == OP_WRITE
+            if wr.any():
+                for f in np.unique(fo[wr]):
+                    m = wr & (fo == f)
+                    tg = s[m] - depths[f]
+                    con = tg > 0
+                    if con.any():
+                        tab = fr_tab[f]
+                        if tab is None or tg[con][-1] > len(tab):
+                            return False      # WAR slot never freed
+                        idx = np.flatnonzero(m)[con]
+                        c[idx] = tab[tg[con] - 1] + 1
+            prev = np.empty(n, dtype=np.int64)
+            prev[0] = 0
+            prev[1:] = t[:-1]
+            if not np.array_equal(t, np.maximum(prev + g, c)):
+                return False
+        # ---- per-query outcome verification against the verified tables
+        cons = full.cons
+        if len(cons):
+            offs = np.zeros(n_mod + 1, dtype=np.int64)
+            for mid in range(n_mod):
+                offs[mid + 1] = offs[mid] + len(times[mid])
+            tglob = (np.concatenate(times) if offs[-1]
+                     else np.zeros(0, dtype=np.int64))
+            cf, cs = cons[:, 1], cons[:, 2]
+            cout = cons[:, 5] != 0
+            tq = tglob[offs[cons[:, 3]] + cons[:, 4]]
+            rs = (cons[:, 0] % 2) == 0        # read-side query codes
+            v = np.zeros(len(cons), dtype=bool)
+            for f in np.unique(cf[rs]):
+                m = rs & (cf == f)
+                tab = fw_tab[f]
+                nw = 0 if tab is None else len(tab)
+                sv = cs[m]
+                ok = sv <= nw
+                res = np.zeros(len(sv), dtype=bool)
+                if ok.any():
+                    res[ok] = tab[sv[ok] - 1] < tq[m][ok]
+                v[m] = res
+            ws = ~rs
+            for f in np.unique(cf[ws]):
+                m = ws & (cf == f)
+                tab = fr_tab[f]
+                nr = 0 if tab is None else len(tab)
+                tg = cs[m] - depths[f]
+                res = tg <= 0
+                dec = ~res & (tg <= nr)
+                if dec.any():
+                    res[dec] = tab[tg[dec] - 1] < tq[m][dec]
+                v[m] = res
+            if not np.array_equal(v, cout):
+                return False
+        # ---- verified: install the run (read-only shared arrays)
+        for mid, st in enumerate(mods):
+            st.kind = kinds[mid]
+            st.fifo = fifos[mid]
+            st.gap = gaps[mid]
+            st.seq = seqs[mid]
+            st.times = times[mid]
+            st.end_gap = full.end_gap[mid]
+            st.state = _H_DONE
+        self.n_done = n_mod
+        self.outputs = dict(full.outputs)
+        self.buffers = [list(vals) for vals in full.leftover]
+        self.reader_of = dict(full.reader_of)
+        self.writer_of = dict(full.writer_of)
+        self.constraints = cons
+        stt = full.stats
+        self.queries = stt["queries"]
+        self.forced = stt["forced"]
+        self.phases = stt["phases"]
+        self.activations = stt["activations"]
+        self.skipped_probes = stt["skipped_probes"]
+        self.bulk_queries = stt["bulk_queries"]
+        self.bursts = stt["bursts"]
+        self.cache_bulk_rows = full.n_rows
+        self._full_replay = True
+        self.cache.full_hits += 1
+        return True
+
     # ------------------------------------------------------------------- run
     def run(self) -> SimResult:
+        if self.cache is not None and self.periodize:
+            full = self.cache.lookup_full(self._fkey)
+            if full is not None:
+                if self._replay_full(full):
+                    return self._finish()
+                self.cache.full_rejects += 1
         mods = self.mods
+        n_mod = len(mods)
         for st in mods:
             self._enqueue(st.mid)
         runq = self.runq
+        pending = self.pending
         while True:
             while runq:
                 mid = runq.popleft()
                 self.queued[mid] = False
                 self._advance(mid)
+                st = mods[mid]
+                if len(st.kind) != len(st.times):
+                    pending.add(mid)
             # ---- quiescence (engine protocol step ❹) ----
             self.phases += 1
-            if all(st.state == _H_DONE for st in mods):
+            if self.n_done == n_mod:
                 break
-            self._solve()
-            if self._resolve_parked():
+            if pending or self.solve_dirty:
+                self._solve()
+            # inline watch-slot gate: _resolve_parked can only make progress
+            # when something is unpriced or a watched table grew
+            if ((self.unpriced or self.rp_wake)
+                    and self._resolve_parked()):
                 continue
             if self.heap:
                 self._force_earliest()
@@ -2773,13 +3703,33 @@ class HybridSim:
             "batch_solves": self.batch_solves,
             "cache_bulk_rows": self.cache_bulk_rows,
         }
-        # commit the memoization cache only on success
-        if self.cache is not None:
+        # commit the memoization caches only on success; a whole-run replay
+        # never ran a generator, so its (empty) ylogs must not overwrite the
+        # variant cache and its arrays are already stored
+        if self.cache is not None and not self._full_replay:
             for st in mods:
                 if st.gen is None and st.cand is not None:
                     continue             # full cache replay: nothing new
                 self.cache.store(self.sig, st.mid,
                                  _CachedRun(st.ylog, st.sends))
+            self.cache.store_full(self._fkey, _FullRun(
+                row_kind_parts,
+                row_fifo_parts,
+                [np.asarray(st.gap, dtype=np.int64) for st in mods],
+                row_seq_parts,
+                [np.asarray(st.times, dtype=np.int64) for st in mods],
+                [st.end_gap for st in mods],
+                cons_cols,
+                dict(self.outputs),
+                [list(self.buffers[fid]) for fid in range(n_fifo)],
+                dict(self.reader_of),
+                dict(self.writer_of),
+                dict(queries=self.queries, forced=self.forced,
+                     phases=self.phases, activations=self.activations,
+                     skipped_probes=self.skipped_probes,
+                     bulk_queries=self.bulk_queries, bursts=self.bursts),
+                int(len(kind_all)),
+            ))
         return SimResult(
             program=program.name,
             outputs=dict(self.outputs),

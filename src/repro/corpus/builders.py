@@ -193,6 +193,53 @@ def _interp(name: str, script, fifos):
                         acc = (acc * 31 + v2 + 7) % MOD
                     if gap:
                         yield Delay(gap)
+            elif op == "FEED":
+                # uniform-rate producer: one write every `gap` cycles — the
+                # steady clock the multi-site / NB-success periodizer
+                # patterns are built against
+                _, fid, n_items, fgap, salt = ins
+                for i in range(n_items):
+                    yield Write(fifos[fid], (i * salt + 1) % 251)
+                    if fgap > 1:
+                        yield Delay(fgap - 1)
+            elif op == "MSPOLL":
+                # multi-site round-robin NB poll: one watcher sweeps several
+                # data FIFOs fed at different (commensurate) rates, so the
+                # steady state is a repeating (site, gap, outcome) tuple no
+                # single-site streak detector can see — the generalized
+                # pattern periodizer's fuzz material.  Bounded by max_iters.
+                _, fids_ms, total, max_iters, pause = ins
+                got = 0
+                for _ in range(max_iters):
+                    for fid in fids_ms:
+                        ok, v = yield ReadNB(fifos[fid])
+                        polls += 1
+                        if ok:
+                            acc = (acc * 31 + v + 7) % MOD
+                            got += 1
+                    if got >= total:
+                        break
+                    if pause:
+                        yield Delay(pause)
+                acc = (acc * 7 + got) % MOD
+            elif op == "NBDRAIN":
+                # steady *successful* NB stream: drain a FIFO with ReadNB at
+                # the producer's rate — after warmup every poll hits, which
+                # a fail-streak detector never periodizes but the success-
+                # pattern path commits in run-ahead-bounded windows
+                _, fid, n_items, attempts, dgap = ins
+                got = 0
+                for _ in range(attempts):
+                    ok, v = yield ReadNB(fifos[fid])
+                    polls += 1
+                    if ok:
+                        acc = (acc * 31 + v + 7) % MOD
+                        got += 1
+                        if got >= n_items:
+                            break
+                    if dgap > 1:
+                        yield Delay(dgap - 1)
+                acc = (acc * 7 + got) % MOD
             elif op == "W1":
                 yield Write(fifos[ins[1]], ins[2])
             elif op == "D":
@@ -388,9 +435,12 @@ def build_poll_case(seed: int, scale: int = 1):
     probe-then-read consumption (``PTR``, commits between queries), nested
     NB reads (``NEST``, alternating query sites) — mid-run outcome
     divergence (the final successful poll, every gap-pattern change) comes
-    with the territory.  Bounded attempt budgets keep every module
-    terminating, so under-drained pipelines surface as reported deadlocks,
-    never hangs.
+    with the territory.  A seeded subset additionally carries a multi-site
+    round-robin watcher over two rate-commensurate feeds (``MSPOLL``, the
+    repeating mixed-outcome (site, gap) tuple) and a matched-rate NB
+    success drain (``FEED`` -> ``NBDRAIN``).  Bounded attempt budgets keep
+    every module terminating, so under-drained pipelines surface as
+    reported deadlocks, never hangs.
     """
     rng = random.Random(seed * 0x517CC1B7 + 0xB5EED)
     n = rng.randint(6, 24) * scale
@@ -404,6 +454,19 @@ def build_poll_case(seed: int, scale: int = 1):
     patterns = [rng.choice(_POLL_PATTERNS) for _ in range(n_pollers)]
     max_polls = [rng.randint(4, 40) * scale for _ in range(n_pollers)]
     sink_delay = rng.choice([0, 0, 1, 2])
+    # multi-site watcher: round-robin NB over two FIFOs fed at rates
+    # period / 2*period, so the steady state is a repeating mixed-outcome
+    # (site, gap) tuple — generalized-pattern periodizer material
+    msite = rng.random() < 0.35
+    ms_items = rng.randint(4, 12) * scale
+    ms_pause = rng.choice([0, 1, 2])
+    ms_depth = rng.randint(2, 8)
+    # NB-success drain: a matched-rate FEED -> NBDRAIN pair where (after
+    # warmup) every poll hits — the success-stream periodizer pattern
+    nbdrain = rng.random() < 0.35
+    nd_items = rng.randint(4, 16) * scale
+    nd_gap = rng.choice([1, 2, 3])
+    nd_depth = rng.randint(2, 8)
 
     def builder() -> Program:
         prog = Program(f"fuzz_poll_{seed}", declared_type=None)
@@ -412,6 +475,12 @@ def build_poll_case(seed: int, scale: int = 1):
         side = prog.fifo("side", max(1, depth // 2)) if nest else None
         fifos = [data] + dones + ([side] if side else [])
         i_side = len(fifos) - 1
+        if msite:
+            fifos += [prog.fifo("ms_a", ms_depth), prog.fifo("ms_b", ms_depth)]
+            i_ma, i_mb = len(fifos) - 2, len(fifos) - 1
+        if nbdrain:
+            fifos.append(prog.fifo("nd", nd_depth))
+            i_nd = len(fifos) - 1
 
         # pollers first: trace="auto" aborts to the hybrid path immediately
         for i in range(n_pollers):
@@ -422,11 +491,31 @@ def build_poll_case(seed: int, scale: int = 1):
                 script = [("POLLV", 1 + i, max_polls[i], patterns[i])]
             prog.add_module(f"poll{i}", _interp(f"poll{i}", script, fifos))
 
+        if msite:
+            ms_total = ms_items + ms_items // 2
+            prog.add_module("watcher", _interp("watcher", [
+                ("MSPOLL", (i_ma, i_mb), ms_total, 2 * ms_total + 16,
+                 ms_pause)], fifos))
+        if nbdrain:
+            prog.add_module("drain", _interp("drain", [
+                ("NBDRAIN", i_nd, nd_items, 3 * nd_items + 24, nd_gap)],
+                fifos))
+
         src_script = [("SRC", 0, n, "B", -1, 0, 0, False, 0)]
         if nest:
             src_script.append(("SRC", i_side, side_extra + 1, "B",
                                -1, 0, 0, False, 0))
         prog.add_module("src", _interp("src", src_script, fifos))
+
+        if msite:
+            ms_period = ms_pause + 2    # cycles per watcher iteration
+            prog.add_module("feed_a", _interp("feed_a", [
+                ("FEED", i_ma, ms_items, ms_period, 7)], fifos))
+            prog.add_module("feed_b", _interp("feed_b", [
+                ("FEED", i_mb, ms_items // 2, 2 * ms_period, 13)], fifos))
+        if nbdrain:
+            prog.add_module("nd_feed", _interp("nd_feed", [
+                ("FEED", i_nd, nd_items, nd_gap, 11)], fifos))
 
         if sink_ptr:
             sink_script = [("PTR", 0, n, sink_tries, ptr_gap)]
@@ -439,5 +528,5 @@ def build_poll_case(seed: int, scale: int = 1):
         return prog
 
     meta = dict(n=n, depth=depth, pollers=n_pollers, patterns=patterns,
-                sink_ptr=sink_ptr, nest=nest)
+                sink_ptr=sink_ptr, nest=nest, msite=msite, nbdrain=nbdrain)
     return builder, meta

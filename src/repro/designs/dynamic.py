@@ -135,7 +135,106 @@ def fig2_poll_burst(items: int = 2048, stages: int = 2, depth: int = 8,
     return prog
 
 
+def multisite_poll(items: int = 1024, depth: int = 64,
+                   pause: int = 2) -> Program:
+    """One watcher round-robins ReadNB over *two* FIFOs fed at different
+    rates — the multi-site periodic pattern.
+
+    The watcher's loop body is ``ReadNB(a); ReadNB(b); Delay(pause)`` —
+    ``pause + 2`` cycles per iteration.  ``feed_a`` produces exactly one
+    value per iteration (every poll of site A succeeds) and ``feed_b``
+    one value per *two* iterations (site B alternates hit/miss), so the
+    steady state is a repeating four-step ``(site, gap, outcome)``
+    tuple: A-hit, B-hit, A-hit, B-miss.  A single-site streak detector
+    sees nothing periodic here; the generalized pattern periodizer arms
+    on the tuple and commits whole windows of mixed-outcome queries
+    against the feeders' run-ahead write tables (horizon = min over the
+    two sites).
+    """
+    prog = Program("multisite_poll", declared_type="C")
+    a = prog.fifo("a", depth)
+    b = prog.fifo("b", depth)
+    period = pause + 2                # cycles per watcher iteration
+    total = items + items // 2
+
+    @prog.module("watcher")           # first: auto-probe bails out fast
+    def watcher():
+        acc = 0
+        got = 0
+        polls = 0
+        while got < total:
+            ok, v = yield ReadNB(a)
+            polls += 1
+            if ok:
+                acc = (acc + v) % 65521
+                got += 1
+            ok, v = yield ReadNB(b)
+            polls += 1
+            if ok:
+                acc = (acc + 3 * v) % 65521
+                got += 1
+            if pause:
+                yield Delay(pause)
+        yield Emit("checksum", acc)
+        yield Emit("polls", polls)
+
+    def make_feed(fifo, n, gap, salt):
+        def feed():
+            for i in range(n):
+                yield Write(fifo, (i * salt + 1) % 251)
+                if gap > 1:
+                    yield Delay(gap - 1)
+        return feed
+
+    prog.add_module("feed_a", make_feed(a, items, period, 7))
+    prog.add_module("feed_b", make_feed(b, items // 2, 2 * period, 13))
+    return prog
+
+
+def nb_success_stream(items: int = 4096, depth: int = 64,
+                      gap: int = 2) -> Program:
+    """Steady-state *successful* NB stream: a run-ahead producer fills a
+    deep FIFO while a ReadNB consumer drains it at the matched rate.
+
+    Once the stream warms up every poll succeeds, so a fail-streak
+    detector never fires — but the success pattern has a fixed period
+    whose commit times are derivable from the producer's committed
+    write table, and the periodizer verifies + commits reads in windows
+    bounded by the producer's run-ahead (≈ ``depth`` rows at a time).
+    """
+    prog = Program("nb_success_stream", declared_type="C")
+    data = prog.fifo("data", depth)
+
+    @prog.module("drain")             # first: auto-probe bails out fast
+    def drain():
+        acc = 0
+        got = 0
+        misses = 0
+        while got < items:
+            ok, v = yield ReadNB(data)
+            if ok:
+                acc = (acc + v) % 65521
+                got += 1
+            else:
+                misses += 1
+            if gap > 1:
+                yield Delay(gap - 1)
+        yield Emit("checksum", acc)
+        yield Emit("misses", misses)
+
+    @prog.module("feed")
+    def feed():
+        for i in range(items):
+            yield Write(data, (i * 11 + 5) % 257)
+            if gap > 1:
+                yield Delay(gap - 1)
+
+    return prog
+
+
 DYNAMIC_DESIGNS = {
     "watchdog_pipe": watchdog_pipe,
     "fig2_poll_burst": fig2_poll_burst,
+    "multisite_poll": multisite_poll,
+    "nb_success_stream": nb_success_stream,
 }

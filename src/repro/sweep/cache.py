@@ -33,6 +33,7 @@ and exposed via :meth:`GraphCache.stats` — the benchmark's
 """
 from __future__ import annotations
 
+import dataclasses
 import pickle
 import threading
 import time as _time
@@ -85,13 +86,16 @@ class CacheEntry:
         only the design key — never the serialized graph.
         """
         if self._graph_blob is None:
-            batch = self.graph.batch
-            try:
-                self.graph.batch = None
-                self._graph_blob = pickle.dumps(self.graph,
-                                                pickle.HIGHEST_PROTOCOL)
-            finally:
-                self.graph.batch = batch
+            # Pickle a shallow copy with the batch view stripped.  The graph
+            # object is shared with concurrent thread-shard solvers, so it
+            # must never be mutated here — not even transiently (an earlier
+            # version nulled ``self.graph.batch`` around the dump without
+            # holding ``self.lock``, and a concurrent solver on the same
+            # warm entry could observe ``batch is None`` mid-solve).  The
+            # copy shares every (immutable) array, so this costs one small
+            # object, not a graph rebuild.
+            clone = dataclasses.replace(self.graph, batch=None)
+            self._graph_blob = pickle.dumps(clone, pickle.HIGHEST_PROTOCOL)
         return self._graph_blob
 
 

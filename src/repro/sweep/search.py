@@ -26,10 +26,20 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.dse import DEADLOCK, BatchOutcome
+from ..core.dse import (CANCELLED, DEADLOCK, FAULTED, REJECTED, TIMED_OUT,
+                        BatchOutcome)
 from ..core.program import Program
-from .scheduler import BULK, CANCELLED
+from .scheduler import BULK
 from .service import SweepService
+
+# Statuses that can never enter the frontier.  DEADLOCK is a solver
+# verdict (the config genuinely stalls); the other four are the sweep
+# service's terminal statuses (PR 6) — the row was never exactly solved,
+# so whatever its ``cycles`` field carries must not be trusted.  The
+# remaining fallback statuses (CYCLE / VIOLATED) are refined by an exact
+# engine re-simulation, so their feasibility is decided by the refined
+# result (``cycles >= 0`` and ``not res.deadlock``), not the raw verdict.
+_INFEASIBLE_STATUSES = (DEADLOCK, CANCELLED, FAULTED, TIMED_OUT, REJECTED)
 
 
 @dataclass
@@ -53,8 +63,7 @@ class SearchOutcome:
 
 def _feasible_mask(out: BatchOutcome) -> np.ndarray:
     feas = (np.asarray(out.cycles) >= 0)
-    feas &= np.asarray(out.status) != DEADLOCK
-    feas &= np.asarray(out.status) != CANCELLED
+    feas &= ~np.isin(np.asarray(out.status), _INFEASIBLE_STATUSES)
     for k, res in enumerate(out.results):
         if res is not None and res.deadlock:
             feas[k] = False
@@ -174,7 +183,11 @@ def successive_halving(service: SweepService, program: Program,
     all_D: List[np.ndarray] = []
     all_C: List[np.ndarray] = []
     all_feas: List[np.ndarray] = []
+    rounds_run = 0
     for _r in range(rounds):
+        if not len(pop):
+            break
+        rounds_run += 1
         fresh = [row for row in pop if tuple(row) not in memo]
         if fresh:
             Df = np.stack(fresh)
@@ -190,13 +203,21 @@ def successive_halving(service: SweepService, program: Program,
         keep = max(1, len(pop) // eta)
         f = np.flatnonzero(feas)
         if len(f) == 0:
-            break
+            break                       # all-infeasible: nothing to mutate
         order = f[np.lexsort((pop[f].sum(axis=1), cycles[f]))][:keep]
         survivors = pop[order]
         children = survivors.repeat(max(eta - 1, 1), axis=0)
         shrink = rng.random(children.shape) < 0.5
         children = np.where(shrink, np.maximum(children // 2, lo), children)
         pop = np.concatenate([survivors, children])
+    if not all_D:
+        # n0 == 0, or every round-0 row was already memoized by the caller:
+        # a well-formed empty outcome, not an np.concatenate crash
+        empty_D = np.zeros((0, F), dtype=np.int64)
+        empty = np.zeros(0, dtype=np.int64)
+        return SearchOutcome(depths=empty_D, cycles=empty,
+                             feasible=np.zeros(0, dtype=bool), pareto=[],
+                             best=None, rounds=rounds_run)
     D = np.concatenate(all_D)
     C = np.concatenate(all_C)
     feas = np.concatenate(all_feas)
@@ -207,4 +228,4 @@ def successive_halving(service: SweepService, program: Program,
         best = (tuple(int(x) for x in D[k]), int(C[k]))
     return SearchOutcome(depths=D, cycles=C, feasible=feas,
                          pareto=pareto_front(D, C, feas), best=best,
-                         rounds=rounds)
+                         rounds=rounds_run)

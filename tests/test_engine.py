@@ -432,6 +432,34 @@ def test_periodized_burst_stops_at_outcome_flip():
     assert g.outputs["hits"] == 2
 
 
+@pytest.mark.parametrize("name", ["multisite_poll", "nb_success_stream"])
+def test_periodized_accounting_multisite_and_success(name):
+    """The generalized periodizer's accounting on its two new pattern
+    classes: multi-site (site, gap) tuples and steady NB-success streams.
+    ``queries_periodized`` must equal the engine's bulk counter, stay
+    within the query total, and the periodized/per-query/generator paths
+    must agree on every semantic stat."""
+    from repro.core.trace import simulate_hybrid
+    from repro.designs.dynamic import DYNAMIC_DESIGNS
+
+    b = lambda: DYNAMIC_DESIGNS[name](items=256)
+    g = simulate(b(), trace="never")
+    hp = simulate_hybrid(b(), periodize=True)
+    hn = simulate_hybrid(b(), periodize=False)
+    assert g.outputs == hp.outputs == hn.outputs
+    assert g.cycles == hp.cycles == hn.cycles
+    assert g.stats.queries == hp.stats.queries == hn.stats.queries
+    assert (g.stats.queries_forced_false == hp.stats.queries_forced_false
+            == hn.stats.queries_forced_false)
+    info = hp.graph._hybrid
+    assert hp.stats.queries_periodized == info["bulk_queries"]
+    assert 0 < hp.stats.queries_periodized <= hp.stats.queries
+    assert info["bursts"] > 0
+    assert hn.stats.queries_periodized == 0
+    # most polls in these steady-state designs are bulk-resolved
+    assert hp.stats.queries_periodized * 2 > hp.stats.queries
+
+
 def test_dead_probe_elimination():
     def build(used):
         prog = Program("deadprobe", declared_type="C")

@@ -164,6 +164,31 @@ def test_fuzz_poll_exercises_periodizer():
     assert per_query > 0                 # fallback exercised
 
 
+def test_fuzz_poll_covers_multisite_and_success_streams():
+    """The seed range must include live multi-site watcher and NB-success
+    drain cases, and at least one of each must actually reach the bulk
+    fast path (mixed-outcome tuples / success streams are periodizable by
+    construction at commensurate rates)."""
+    ms_live = nd_live = ms_bulk = nd_bulk = 0
+    for seed in range(N_POLL_SEEDS):
+        builder, meta = build_poll_case(seed)
+        if not (meta["msite"] or meta["nbdrain"]):
+            continue
+        try:
+            r = simulate_hybrid(builder())
+        except TraceUnsupported:
+            continue
+        bulk = r.graph._hybrid["bulk_queries"]
+        if meta["msite"]:
+            ms_live += 1
+            ms_bulk += bulk
+        if meta["nbdrain"]:
+            nd_live += 1
+            nd_bulk += bulk
+    assert ms_live > 0 and nd_live > 0
+    assert ms_bulk > 0 and nd_bulk > 0
+
+
 def test_fuzz_poll_exercises_batch_solver():
     """The tier-1 poll cases are too small to cross the default batch-
     solver threshold, so a corpus slice runs with the solver forced on

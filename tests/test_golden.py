@@ -32,7 +32,8 @@ import pytest
 
 from repro.core import resimulate, resimulate_batch, simulate
 from repro.core.trace import TraceUnsupported, simulate_hybrid
-from repro.designs.dynamic import fig2_poll_burst, watchdog_pipe
+from repro.designs.dynamic import (fig2_poll_burst, multisite_poll,
+                                   nb_success_stream, watchdog_pipe)
 from repro.designs.paper import PAPER_DESIGNS
 from repro.designs.typea import (fir_filter, high_latency_pipe,
                                  merge_sort_staged, parallel_loops,
@@ -60,6 +61,8 @@ GOLDEN_DESIGNS = {
     "watchdog_pipe": lambda: watchdog_pipe(items=96, stages=2, depth=4,
                                            poll_gap=16),
     "fig2_poll_burst": lambda: fig2_poll_burst(items=96, stages=2, depth=4),
+    "multisite_poll": lambda: multisite_poll(items=96, depth=16),
+    "nb_success_stream": lambda: nb_success_stream(items=96, depth=16),
     # Type A taxonomy designs (straight-line trace path)
     "producer_consumer": lambda: producer_consumer(n=64),
     "fir_filter": lambda: fir_filter(n=96, taps=4),

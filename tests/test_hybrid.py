@@ -112,9 +112,18 @@ def test_cache_full_replay_skips_generators():
     b = _HYBRID_SMALL["fig2_timer"]
     r1 = simulate(b(), trace="auto", hybrid_cache=cache)
     assert cache.hits == 0 and cache.misses == 3
+    # warm repeat: the whole-run replay serves every row from the verified
+    # _FullRun entry — no generator runs, no segment lookups at all
     r2 = simulate(b(), trace="auto", hybrid_cache=cache)
+    assert cache.full_hits == 1 and cache.full_rejects == 0
+    assert cache.divergences == 0
+    assert (r2.graph._hybrid["cache_bulk_rows"] == r2.graph._hybrid["ops"]
+            > 0)
+    _assert_bit_identical(r1, r2, "full replay")
+    # the per-module segment cache still drives the periodize=False path
+    r3 = simulate(b(), trace="auto", hybrid_cache=cache, periodize=False)
     assert cache.hits == 3 and cache.divergences == 0
-    _assert_bit_identical(r1, r2, "memo")
+    _assert_bit_identical(r1, r3, "segment memo")
 
 
 def test_cache_divergence_and_branch_reconvergence():
@@ -130,10 +139,76 @@ def test_cache_divergence_and_branch_reconvergence():
     _assert_bit_identical(g1, r1, "diverged run")
     assert r1.outputs != base.outputs      # the witness classify hunts for
     before = cache.divergences
-    r2 = simulate(b(), depths=(1,), trace="auto", hybrid_cache=cache)
+    # periodize=False bypasses the whole-run replay, so this exercises the
+    # segment cache's branch store: revisiting a seen depth vector switches
+    # to the recorded branch instead of re-running generators
+    r2 = simulate(b(), depths=(1,), trace="auto", hybrid_cache=cache,
+                  periodize=False)
     assert cache.divergences == before     # replayed from the stored branch
     assert cache.hits + cache.switches >= 2
     _assert_bit_identical(g1, r2, "reconverged run")
+    # the default path serves the same revisit from the _FullRun entry the
+    # divergent run stored — keyed by content, so the perturbed-depth entry
+    # never collides with the base run's
+    r3 = simulate(b(), depths=(1,), trace="auto", hybrid_cache=cache)
+    assert cache.full_hits == 1 and cache.full_rejects == 0
+    assert cache.divergences == before
+    _assert_bit_identical(g1, r3, "full replay at perturbed depths")
+
+
+def test_cache_keys_on_content_not_names():
+    """branch(96) and branch(160) share every name, and their NB outcome
+    streams agree right up to the shorter run's end — a name-keyed segment
+    cache silently replayed branch(96)'s results for branch(160) (zero
+    divergences: the cached stream just ends early).  Both cache layers
+    must key on module content so each size gets its own entries."""
+    cache = HybridCache()
+    b1 = lambda: PAPER_DESIGNS["branch"](prog_len=96)
+    b2 = lambda: PAPER_DESIGNS["branch"](prog_len=160)
+    assert HybridCache.signature(b1()) != HybridCache.signature(b2())
+    g2 = simulate(b2(), trace="never")
+    r1 = simulate(b1(), trace="always", hybrid_cache=cache)
+    r2 = simulate(b2(), trace="always", hybrid_cache=cache)
+    assert cache.full_hits == 0            # distinct fingerprints: cold both
+    _assert_bit_identical(g2, r2, "branch(160) after branch(96) warmed")
+    assert r1.cycles != r2.cycles and r1.outputs != r2.outputs
+    w1 = simulate(b1(), trace="always", hybrid_cache=cache)
+    w2 = simulate(b2(), trace="always", hybrid_cache=cache)
+    assert cache.full_hits == 2 and cache.full_rejects == 0
+    _assert_bit_identical(r1, w1, "branch(96) warm")
+    _assert_bit_identical(r2, w2, "branch(160) warm")
+    # depth perturbations of the SAME build still share segment entries
+    # (the signature excludes FIFO depths)
+    p1, p2 = b1(), b1()
+    p2.fifos[0].depth += 3
+    assert HybridCache.signature(p1) == HybridCache.signature(p2)
+
+
+def test_full_replay_rejects_corrupt_entry_and_falls_back():
+    """Per-entry verification: a tampered committed time (fixpoint layer)
+    or a flipped query outcome (verdict layer) must reject the cached run
+    and fall back to the exact protocol — which then re-stores a clean
+    entry that serves the next warm hit."""
+    from repro.core.trace import program_fingerprint
+
+    cache = HybridCache()
+    b = _HYBRID_SMALL["fig2_timer"]
+    r1 = simulate(b(), trace="always", hybrid_cache=cache)
+    key = program_fingerprint(b())
+    run = cache.lookup_full(key)
+    assert run is not None
+    run.times[0][0] += 1                   # break the max-equation fixpoint
+    r2 = simulate(b(), trace="always", hybrid_cache=cache)
+    assert cache.full_rejects == 1 and cache.full_hits == 0
+    _assert_bit_identical(r1, r2, "fallback after time corruption")
+    run = cache.lookup_full(key)           # the fallback re-stored cleanly
+    run.cons[0, 5] ^= 1                    # flip a recorded query verdict
+    r3 = simulate(b(), trace="always", hybrid_cache=cache)
+    assert cache.full_rejects == 2 and cache.full_hits == 0
+    _assert_bit_identical(r1, r3, "fallback after outcome corruption")
+    r4 = simulate(b(), trace="always", hybrid_cache=cache)
+    assert cache.full_hits == 1
+    _assert_bit_identical(r1, r4, "clean warm hit after re-store")
 
 
 def test_classify_dynamic_uses_shared_cache():

@@ -61,6 +61,7 @@ def test_maxplus_kernel_matches_ref(n_real):
     np.testing.assert_array_equal(np.asarray(t_k), np.asarray(t_r))
 
 
+@pytest.mark.property
 @settings(max_examples=15, deadline=None)
 @given(st.integers(2, 100), st.integers(0, 2**31 - 1))
 def test_maxplus_sweep_property(n_real, seed):
@@ -129,6 +130,7 @@ def test_flash_attention_window_softcap(window, softcap):
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.property
 @settings(max_examples=10, deadline=None)
 @given(st.sampled_from([128, 256]), st.sampled_from([1, 2, 4]),
        st.sampled_from([64, 128]), st.integers(0, 2**31 - 1))

@@ -11,6 +11,8 @@ Invariants tested on randomized dataflow programs:
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.property   # opt-in tier: pytest -m property
+
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 

@@ -10,6 +10,8 @@ are driven deterministically through manual-mode ``SweepService.step()``
 ``service`` marker (tier-1 keeps the threaded fallback).
 """
 import pickle
+import threading
+import time
 
 import numpy as np
 import pytest
@@ -548,6 +550,149 @@ def test_successive_halving_reduces_area():
     # every frontier point is exact
     for dv, _area, cyc in out.pareto:
         assert simulate(builder(), depths=dv).cycles == cyc
+
+
+# ------------------------------------------- search-driver bugfixes (ISSUE 9)
+def test_feasible_mask_excludes_service_terminal_statuses():
+    """Regression: rows whose status is a service-level terminal verdict
+    (FAULTED / TIMED_OUT / REJECTED / CANCELLED) must be infeasible even
+    when the cycles field carries a stale non-negative value — the old
+    mask excluded them only via the incidental ``cycles >= 0`` check."""
+    from repro.core.dse import (BatchOutcome, CYCLE, FAULTED, REJECTED,
+                                REUSED, TIMED_OUT)
+    from repro.sweep.search import _feasible_mask
+
+    status = np.array([REUSED, FAULTED, TIMED_OUT, REJECTED, CANCELLED,
+                       CYCLE], dtype=np.int8)
+    cycles = np.array([10, 11, 12, 13, 14, 15], dtype=np.int64)  # all stale>=0
+    K = len(status)
+    out = BatchOutcome(ok=status == REUSED, cycles=cycles, status=status,
+                       violated=np.zeros(K, dtype=np.int64),
+                       reasons=[""] * K, results=[None] * K, elapsed_s=0.0)
+    feas = _feasible_mask(out)
+    # REUSED is feasible; CYCLE was refined by an exact fallback (cycles
+    # >= 0, no deadlock result) so it stays feasible; every service
+    # terminal status is excluded regardless of its cycles field
+    assert feas.tolist() == [True, False, False, False, False, True]
+
+
+def test_search_driver_excludes_faulted_rows_under_injected_faults():
+    """A persistently faulting shard terminates its rows FAULTED; the
+    search driver must keep them out of the frontier and still finish."""
+    builder = lambda: producer_consumer(n=32, depth=4)
+    # chunk0's launch and its single retry both fault -> FAULTED rows
+    inj = FaultInjector(seed=3).arm("shard.fault", at=[0, 2])
+    with _manual_service(block=8, shards=2, min_shard_rows=1, injector=inj,
+                         retry=RetryPolicy(max_attempts=2,
+                                           backoff_s=0.0)) as svc:
+        out = grid_search(svc, builder(), [1, 2, 3, 4, 5, 6, 7, 8])
+    faulted = np.asarray(out.cycles) == -1
+    assert faulted.any(), "injector never fired"
+    assert not out.feasible[faulted].any()
+    assert out.feasible[~faulted].all()
+    front_depths = {dv for dv, _a, _c in out.pareto}
+    for k in np.flatnonzero(faulted):
+        assert tuple(int(x) for x in out.depths[k]) not in front_depths
+    assert out.best is not None
+
+
+def test_successive_halving_empty_population_is_well_formed():
+    """Regression: ``n0 == 0`` used to crash in ``np.concatenate`` on an
+    empty list; it must return an empty, well-formed SearchOutcome."""
+    builder = lambda: producer_consumer(n=16, depth=2)
+    with _manual_service(block=8) as svc:
+        out = successive_halving(svc, builder(), n0=0, rounds=3, eta=2)
+    assert out.depths.shape == (0, len(builder().fifos))
+    assert len(out.cycles) == 0 and len(out.feasible) == 0
+    assert out.pareto == [] and out.best is None
+    assert out.rounds == 0
+    assert out.summary().startswith("0 evaluated")
+
+
+def test_successive_halving_all_infeasible_round_accounting():
+    """Regression: an all-infeasible round-0 population breaks out of the
+    loop — ``rounds`` must report the rounds actually run, not the
+    requested budget."""
+    def exchange(K=6):
+        # write-K-then-read-K exchange: live at depth >= K (the base),
+        # a true deadlock at every depth < K (all sampled candidates)
+        from repro.core.program import Program, Read, Write
+        prog = Program("sh_dead", declared_type="B")
+        ab = prog.fifo("ab", K)
+        ba = prog.fifo("ba", K)
+
+        @prog.module("x")
+        def x():
+            for i in range(K):
+                yield Write(ab, i)
+            for _ in range(K):
+                yield Read(ba)
+
+        @prog.module("y")
+        def y():
+            for i in range(K):
+                yield Write(ba, i)
+            for _ in range(K):
+                yield Read(ab)
+
+        return prog
+
+    with _manual_service(block=16) as svc:
+        out = successive_halving(svc, exchange(), n0=4, rounds=5,
+                                 eta=2, lo=1, hi=5, seed=1)
+    assert not out.feasible.any() and out.best is None
+    assert out.rounds == 1                       # broke after round 0
+    assert len(out.depths) == len(out.cycles) == len(out.feasible)
+
+
+def test_graph_blob_never_mutates_shared_graph_two_threads(monkeypatch):
+    """Regression: ``CacheEntry.graph_blob`` used to null the shared
+    ``graph.batch`` around pickling without holding the entry lock; a
+    concurrent thread-shard solver could observe ``batch is None``
+    mid-solve.  The blob must now be built from a copy."""
+    import repro.sweep.cache as cache_mod
+
+    base = simulate(producer_consumer(n=32, depth=2))
+    cache = GraphCache()
+    entry = cache.get_or_build(base)
+    batch_view = entry.graph.batch
+    assert batch_view is not None
+
+    real_dumps = pickle.dumps
+    dumped_graph_batch = []
+
+    def slow_dumps(obj, *a, **kw):
+        # capture what a concurrent reader of the SHARED graph would see
+        # exactly while the dump is in flight, and widen the race window
+        dumped_graph_batch.append(entry.graph.batch)
+        time.sleep(0.002)
+        return real_dumps(obj, *a, **kw)
+
+    monkeypatch.setattr(cache_mod.pickle, "dumps", slow_dumps)
+    observed_none = threading.Event()
+    stop = threading.Event()
+
+    def shard_solver():
+        while not stop.is_set():
+            if entry.graph.batch is None:
+                observed_none.set()
+                return
+
+    t = threading.Thread(target=shard_solver)
+    t.start()
+    try:
+        for _ in range(20):
+            entry._graph_blob = None             # force a fresh pickle
+            blob = entry.graph_blob()
+    finally:
+        stop.set()
+        t.join()
+    assert not observed_none.is_set()
+    assert all(b is batch_view for b in dumped_graph_batch)
+    assert entry.graph.batch is batch_view
+    g2 = pickle.loads(blob)
+    assert g2.batch is None                      # blob still ships stripped
+    assert g2.n == entry.graph.n
 
 
 # ------------------------------------------------------- dse-level dedup

@@ -30,7 +30,7 @@ def main(quick: bool = False, out: str = None) -> None:
                                    pipeline_table, table3_funcsim,
                                    table5_vs_decoupled, table6_batch_dse,
                                    table6_incremental, table_corpus_scaling,
-                                   table_hybrid_replay,
+                                   table_delta_resim, table_hybrid_replay,
                                    table_query_periodization,
                                    table_sparse_maxplus,
                                    table_sweep_faults, table_sweep_service,
@@ -50,6 +50,7 @@ def main(quick: bool = False, out: str = None) -> None:
     rows += table_query_periodization()
     rows += table_corpus_scaling()
     rows += table_sparse_maxplus()
+    rows += table_delta_resim()
     if not quick:
         rows += pipeline_table()
     print("\n== CSV (name,us_per_call,derived) ==")

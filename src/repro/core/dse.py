@@ -605,7 +605,8 @@ def status_reason(cache: CompiledGraph, status_k: int, violated_k: int,
 def materialize_block(result: SimResult, Du: np.ndarray,
                       status_u: np.ndarray, cycles_u: np.ndarray,
                       violated_u: np.ndarray, fallback_mask: np.ndarray,
-                      engine_label: str = "omnisim-batch", lock=None):
+                      engine_label: str = "omnisim-batch", lock=None,
+                      hybrid_cache=None):
     """Post-solve verdict assembly shared by :func:`resimulate_batch` and
     the sweep scheduler (``repro/sweep/scheduler.py``).
 
@@ -615,7 +616,11 @@ def materialize_block(result: SimResult, Du: np.ndarray,
     re-simulation (``cycles_u`` is updated in place with its result).
     ``lock`` serializes the fallback (it temporarily mutates Program FIFO
     depths); the sweep scheduler passes the design's entry lock, direct
-    library calls need none.  Returns ``(results_u, reasons_u)``.
+    library calls need none.  ``hybrid_cache`` threads a shared
+    :class:`~repro.core.trace.HybridCache` into the fallback simulations,
+    so a dynamic design's repeat fallbacks (same depths, any tenant)
+    replay the verified whole-run entry instead of re-interpreting.
+    Returns ``(results_u, reasons_u)``.
     """
     engine: OmniSim = result.graph
     cache = compile_graph(engine)
@@ -643,7 +648,8 @@ def materialize_block(result: SimResult, Du: np.ndarray,
                 saved = engine.program.depths()
                 try:
                     full = simulate(engine.program,
-                                    depths=tuple(int(d) for d in Du[u]))
+                                    depths=tuple(int(d) for d in Du[u]),
+                                    hybrid_cache=hybrid_cache)
                 finally:
                     engine.program.with_depths(saved)
             results_u[u] = full

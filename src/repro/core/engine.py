@@ -103,10 +103,19 @@ class OmniSim:
     """
 
     def __init__(self, program: Program, shuffle_seed: Optional[int] = None,
-                 max_steps: int = 50_000_000, verify_finalization: bool = False):
+                 max_steps: int = 50_000_000, verify_finalization: bool = False,
+                 _fifo_shells: bool = False):
         self.program = program
         self.graph = SimGraph()
-        self.fifos = [FifoTable(f.fid, f.name, f.depth) for f in program.fifos]
+        # the trace replay (core/trace.py) installs every table's event
+        # arrays wholesale right after construction — _fifo_shells skips
+        # the per-table buffer allocations it would immediately discard
+        if _fifo_shells:
+            self.fifos = [FifoTable._shell(f.fid, f.name, f.depth)
+                          for f in program.fifos]
+        else:
+            self.fifos = [FifoTable(f.fid, f.name, f.depth)
+                          for f in program.fifos]
         self.tasks = [_Task(m.mid, m.name, None) for m in program.modules]
         self.outputs: Dict[str, Any] = {}
         self.stats = SimStats()

@@ -244,6 +244,57 @@ def check_constraints(cache: CompiledGraph, times: np.ndarray,
     return int((new_ok != cache.c_out).sum())
 
 
+def verify_times(graph: CompiledGraph, times: np.ndarray,
+                 depths: Sequence[int]) -> Optional[str]:
+    """Pointwise max-plus + Table-2 re-verification of a claimed solution.
+
+    The PR 9 ``_FullRun`` verifier pattern, lifted to a
+    :class:`CompiledGraph`: re-derive every node's contribution vector
+    (base + RAW + WAR regenerated for ``depths``) and check that ``times``
+    satisfies the chain recurrence ``t[i] == max(t[i-1] + seq_w[i], c[i])``
+    *pointwise*, then re-evaluate every stored Table-2 constraint outcome.
+    The dependency graph of a completed run is acyclic, so pointwise
+    equality pins the unique fixpoint — a verified solution IS the
+    solution, no matter how it was produced.  ``repro.delta.patch`` runs
+    this over every spliced re-record before serving it: any stale reuse
+    fails here and is rejected to a cold rebuild, never served.
+
+    Returns ``None`` when verified, else a human-readable reason.
+    """
+    n = graph.n
+    times = np.asarray(times, dtype=np.int64)
+    if len(times) != n:
+        return f"times length {len(times)} != graph nodes {n}"
+    c = graph.base.astype(np.int64, copy=True)
+    if len(graph.raw_dst):
+        np.maximum.at(c, graph.raw_dst, times[graph.raw_src] + graph.raw_w)
+    for fid, (w_nodes, r_nodes, blocking) in enumerate(graph.fifos):
+        S = int(depths[fid])
+        nw = len(w_nodes)
+        if nw <= S:
+            continue
+        tgt = np.arange(nw - S, dtype=np.int64)          # writes > S
+        blk = blocking[S:]
+        if np.any(blk & (tgt >= len(r_nodes))):
+            return (f"blocking write beyond depth {S} of FIFO {fid} has no "
+                    f"matching read (structural deadlock)")
+        sel = blk & (tgt < len(r_nodes))
+        np.maximum.at(c, w_nodes[S:][sel], times[r_nodes[tgt[sel]]] + 1)
+    prev = np.full(n, NEGI, dtype=np.int64)
+    for ch in graph.chains:
+        if len(ch) > 1:
+            prev[ch[1:]] = times[ch[:-1]]
+    expect = np.maximum(np.where(prev == NEGI, NEGI, prev + graph.seq_w), c)
+    if not np.array_equal(expect, times):
+        bad = int(np.flatnonzero(expect != times)[0])
+        return (f"pointwise max-plus mismatch at node {bad}: "
+                f"expected {int(expect[bad])}, claimed {int(times[bad])}")
+    flips = check_constraints(graph, times, depths)
+    if flips:
+        return f"{flips} Table-2 constraint outcome(s) flipped"
+    return None
+
+
 def resimulate(result: SimResult, new_depths: Sequence[int],
                fallback: bool = True) -> IncrementalOutcome:
     """Attempt incremental re-simulation of an OmniSim result.

@@ -53,6 +53,7 @@ paper Table 2.
 """
 from __future__ import annotations
 
+import hashlib
 import heapq
 import types
 from collections import OrderedDict, deque
@@ -143,6 +144,10 @@ class ModuleTrace:
     end_gap: int
     lead: int = 0
     reps: int = 1
+    # set by periodize() when the search found nothing, so re-periodizing
+    # a trace (the delta patch path periodizes spliced recordings whose
+    # unchanged modules were already scanned) skips the O(L^2) re-search
+    no_period: bool = False
 
     @property
     def n_ops(self) -> int:
@@ -172,9 +177,10 @@ class ModuleTrace:
         ops) such that the remaining stream is an integer number of exact
         (kind, fifo, gap) repetitions, mirroring the paper's dynamic-stage
         unrolling of Sec. 5.1 in reverse: we *re-roll* the unrolled steady
-        state.  Returns ``self`` unchanged when no period is found.
+        state.  Returns ``self`` unchanged when no period is found (and
+        marks ``no_period`` so repeat calls are O(1)).
         """
-        if self.reps != 1 or len(self.kind) < 2 * min_body:
+        if self.no_period or self.reps != 1 or len(self.kind) < 2 * min_body:
             return self
         L = len(self.kind)
         key = self.fifo * 8 + self.kind          # one comparable op id
@@ -200,6 +206,7 @@ class ModuleTrace:
                         fifo=self.fifo[:lead + p].copy(),
                         gap=self.gap[:lead + p].copy(),
                         end_gap=self.end_gap, lead=lead, reps=T // p)
+        self.no_period = True
         return self
 
 
@@ -222,6 +229,15 @@ class RecordedTrace:
     skipped_probes: int = 0
     steps: int = 0
     activations: int = 0
+    # --- optional functional capture (record_trace(keep_values=True)) ---
+    # the delta layer (repro.delta) needs the *values* that flowed, not
+    # just the op skeleton: per-FIFO written-value streams (complete, in
+    # write order — SPSC means one writer per FIFO so this is also that
+    # writer's per-FIFO write stream), per-module Emit records in emit
+    # order, and per-module dead-probe counts.  None unless captured.
+    values: Optional[List[list]] = None          # [fid] -> written values
+    module_emits: Optional[List[list]] = None    # [mid] -> [(key, value)]
+    module_skips: Optional[List[int]] = None     # [mid] -> dead probes
 
     @property
     def n_ops(self) -> int:
@@ -243,7 +259,8 @@ class RecordedTrace:
 _REC_QUANTUM = 256     # ops per activation before the recorder rotates
 
 
-def record_trace(program: Program, max_steps: int = 50_000_000) -> RecordedTrace:
+def record_trace(program: Program, max_steps: int = 50_000_000,
+                 keep_values: bool = False) -> RecordedTrace:
     """Run every module generator once, untimed, and record its op stream.
 
     Untimed KPN semantics: FIFOs are unbounded, a ``Read`` from an empty
@@ -262,10 +279,21 @@ def record_trace(program: Program, max_steps: int = 50_000_000) -> RecordedTrace
 
     Raises ``RuntimeError`` when ``max_steps`` generator resumptions are
     exceeded (possible livelock), matching the generator engine's budget.
+
+    ``keep_values=True`` additionally captures the functional side of the
+    run — per-FIFO written-value streams, per-module Emit lists and
+    per-module dead-probe counts — which is what ``repro.delta`` needs to
+    re-record a single edited module in isolation and verify its writes
+    against the original streams.
     """
     modules = program.modules
     n_mod = len(modules)
     buffers: List[deque] = [deque() for _ in program.fifos]
+    wvals: Optional[List[list]] = (
+        [[] for _ in program.fifos] if keep_values else None)
+    memits: Optional[List[list]] = (
+        [[] for _ in range(n_mod)] if keep_values else None)
+    mskips: Optional[List[int]] = [0] * n_mod if keep_values else None
     kinds: List[list] = [[] for _ in range(n_mod)]
     fids: List[list] = [[] for _ in range(n_mod)]
     gaps: List[list] = [[] for _ in range(n_mod)]
@@ -344,6 +372,8 @@ def record_trace(program: Program, max_steps: int = 50_000_000) -> RecordedTrace
             elif cls is Write:
                 fid = op.fifo.fid
                 buffers[fid].append(op.value)
+                if wvals is not None:
+                    wvals[fid].append(op.value)
                 kapp(OP_WRITE)
                 fapp(fid)
                 gapp(gap)
@@ -356,9 +386,13 @@ def record_trace(program: Program, max_steps: int = 50_000_000) -> RecordedTrace
                 gap += op.cycles
             elif cls is Emit:
                 outputs[op.key] = op.value
+                if memits is not None:
+                    memits[mid].append((op.key, op.value))
             elif (cls is Empty or cls is Full) and not op.used:
                 # dead probe (paper Sec. 7.3.2): costs 1 cycle, no query
                 skipped_probes += 1
+                if mskips is not None:
+                    mskips[mid] += 1
                 gap += 1
             elif cls in (ReadNB, WriteNB, Empty, Full):
                 raise TraceUnsupported(
@@ -387,7 +421,9 @@ def record_trace(program: Program, max_steps: int = 50_000_000) -> RecordedTrace
                          outputs=outputs,
                          leftovers=[list(b) for b in buffers],
                          skipped_probes=skipped_probes, steps=steps,
-                         activations=activations)
+                         activations=activations,
+                         values=wvals, module_emits=memits,
+                         module_skips=mskips)
 
 
 # ---------------------------------------------------------------------------
@@ -542,8 +578,37 @@ def compile_trace(rec: RecordedTrace, n_fifos: int) -> CompiledTrace:
 # ---------------------------------------------------------------------------
 # Pass 3: replay — Gauss-Seidel chain fixpoint (array-level dispatch)
 # ---------------------------------------------------------------------------
+def _cross_buckets(ct: CompiledTrace, war_dst: np.ndarray,
+                   war_src: np.ndarray, starts: np.ndarray) -> Dict:
+    """Bucket cross edges by source chain (RAW: writer -> reader module;
+    WAR: reader -> writer module) — no sort needed, FIFO sides are SPSC.
+
+    Pure function of the trace skeleton + WAR edge set: the delta patch
+    path caches the result per :class:`~repro.delta.patch.DeltaState` and
+    reuses it whenever the skeleton and depth vector are unchanged.
+    """
+    out_buckets: Dict[int, List[Tuple[int, np.ndarray, np.ndarray]]] = {}
+    for dst, src in ((ct.raw_dst, ct.raw_src), (war_dst, war_src)):
+        if not len(dst):
+            continue
+        # split by fifo-contiguous runs: each concatenated part came from
+        # one fifo, i.e. one (src chain, dst chain) pair
+        sch = np.searchsorted(starts, src, "right") - 1
+        dch = np.searchsorted(starts, dst, "right") - 1
+        cut = np.flatnonzero(np.diff(sch) | np.diff(dch))
+        bounds = np.concatenate([[0], cut + 1, [len(dst)]])
+        run_sc, run_dc = sch[bounds[:-1]], dch[bounds[:-1]]
+        for i, (a, b) in enumerate(zip(bounds[:-1], bounds[1:])):
+            out_buckets.setdefault(int(run_sc[i]), []).append(
+                (int(run_dc[i]), src[a:b], dst[a:b]))
+    return out_buckets
+
+
 def _solve_times(ct: CompiledTrace, war_dst: np.ndarray,
-                 war_src: np.ndarray) -> Tuple[np.ndarray, int]:
+                 war_src: np.ndarray,
+                 warm: Optional[Tuple[np.ndarray, List[int]]] = None,
+                 buckets: Optional[Dict] = None,
+                 ) -> Tuple[np.ndarray, int]:
     """Longest-path node times over SEQ chains + RAW/WAR cross edges.
 
     Within a chain, ``t = cw + cummax(c - cw)`` (cw = cumulative SEQ
@@ -556,6 +621,20 @@ def _solve_times(ct: CompiledTrace, war_dst: np.ndarray,
     bound: raises :class:`TraceUnsupported` (the timed engine would
     deadlock; the generator path reports it exactly).
 
+    ``warm = (old_times, dirty_chains)`` seeds the fixpoint from a prior
+    solution of the *same* graph with only ``dirty_chains`` marked dirty —
+    the edit-and-resimulate fast path (``repro.delta.patch``).  Sound when
+    every weight change is an increase (the old solution is then a lower
+    bound of the new least fixpoint, and ascending Gauss-Seidel converges
+    to the least fixpoint from any lower bound); if weights *decreased*,
+    the result can land above the true fixpoint, so warm callers MUST
+    check the result (``verify_times``) and re-solve cold on mismatch.
+
+    ``buckets`` optionally supplies a prebuilt :func:`_cross_buckets`
+    table (it must match ``ct`` + the WAR edge *content* exactly — the
+    patch path reuses the snapshot's table when skeleton and depths are
+    unchanged).
+
     Returns ``(times, sweeps)`` — times in cycles.
     """
     n = ct.n
@@ -565,27 +644,22 @@ def _solve_times(ct: CompiledTrace, war_dst: np.ndarray,
     c = ct.base.copy()
     t = np.full(n, NEGI, dtype=np.int64)
     starts = np.asarray([lo for (lo, _) in ct.slices] or [0], np.int64)
-
-    def chain_of(col: int) -> int:
-        return int(np.searchsorted(starts, col, side="right") - 1)
-
-    # bucket cross edges by source chain (RAW: writer -> reader module;
-    # WAR: reader -> writer module) — no sort needed, FIFO sides are SPSC
-    out_buckets: Dict[int, List[Tuple[int, np.ndarray, np.ndarray]]] = {}
-    for dst, src in ((ct.raw_dst, ct.raw_src), (war_dst, war_src)):
-        if not len(dst):
-            continue
-        # split by fifo-contiguous runs: each concatenated part came from
-        # one fifo, i.e. one (src chain, dst chain) pair
-        cut = np.flatnonzero(np.diff(np.searchsorted(starts, src, "right"))
-                             | np.diff(np.searchsorted(starts, dst, "right")))
-        bounds = np.concatenate([[0], cut + 1, [len(dst)]])
-        for a, b in zip(bounds[:-1], bounds[1:]):
-            sc, dc = chain_of(int(src[a])), chain_of(int(dst[a]))
-            out_buckets.setdefault(sc, []).append((dc, src[a:b], dst[a:b]))
+    out_buckets = buckets if buckets is not None \
+        else _cross_buckets(ct, war_dst, war_src, starts)
 
     bound = int(ct.seq_w.sum() + len(ct.raw_dst) + len(war_dst) + 1)
-    dirty = np.ones(n_ch, dtype=bool)
+    if warm is not None:
+        old_t, dirty_chains = warm
+        t = old_t.astype(np.int64, copy=True)
+        # re-derive cross contributions from the old solution (one
+        # vectorized pass), then only the edited chains start dirty
+        for dst, src in ((ct.raw_dst, ct.raw_src), (war_dst, war_src)):
+            if len(dst):
+                np.maximum.at(c, dst, t[src] + 1)
+        dirty = np.zeros(n_ch, dtype=bool)
+        dirty[list(dirty_chains)] = True
+    else:
+        dirty = np.ones(n_ch, dtype=bool)
     sweeps = 0
     max_sweeps = n + 2
     while dirty.any():
@@ -754,7 +828,29 @@ del _name
 # ---------------------------------------------------------------------------
 # Content-addressed design keys: warm-cache reuse of the pre-built graph
 # ---------------------------------------------------------------------------
-def _fp_update(h, obj, depth: int = 0, fifo_depth: bool = True) -> None:
+_FP_PRIM = (str, int, float, bool, bytes, complex, type(None))
+
+
+def _fp_plain(obj, depth: int = 0) -> bool:
+    """True when ``obj`` is pure primitive data (possibly nested in plain
+    lists/tuples): its ``repr`` is then deterministic content, so the
+    fingerprint walk can hash it in one C-level call instead of recursing
+    per element.  Exact-type checks keep subclasses (enums, numpy scalars,
+    repr-overriding wrappers) on the structural path.
+    """
+    t = type(obj)
+    if t in _FP_PRIM:
+        return True
+    if (t is tuple or t is list) and depth <= 8:
+        for x in obj:                    # plain loop: no genexpr frames —
+            if not _fp_plain(x, depth + 1):   # this predicate runs per
+                return False             # element of every macro script
+        return True
+    return False
+
+
+def _fp_update(h, obj, depth: int = 0, fifo_depth: bool = True,
+               memo: Optional[dict] = None) -> None:
     """Feed ``obj`` into hash ``h`` by *content*, not identity.
 
     Function objects are fingerprinted by bytecode + consts + defaults +
@@ -774,10 +870,27 @@ def _fp_update(h, obj, depth: int = 0, fifo_depth: bool = True) -> None:
     a false hit).  Default-``__repr__`` instances are recursed through
     ``vars()`` so ordinary config objects captured by closures still hash
     by content.
+
+    Containers (list/tuple/dict) hash *Merkle-style*: the parent stream
+    receives the sha256 digest of the container's own content stream.
+    That makes ``memo`` — an optional per-top-level-call ``{(id, depth):
+    digest}`` dict — sound: an object shared between modules (generated
+    designs capture one FIFO list in every module closure) is walked once
+    per design instead of once per module, turning whole-design
+    fingerprinting from quadratic (~300 ms at 300 modules) to linear.
+    Memoized and memo-less calls produce identical bytes; memo entries
+    must not outlive the hashed objects (callers build a fresh memo per
+    design).
     """
     if depth > 8:                        # defensive bound on weird closures
         h.update(b"<deep>")
         h.update(repr(obj).encode())     # still content-based for data
+        return
+    if type(obj) in _FP_PRIM:
+        # exact-type primitive leaf: same bytes the final ``repr`` branch
+        # would produce, without walking the isinstance chain — closure
+        # cells are mostly ints/strs, so this is the hottest exit
+        h.update(repr(obj).encode())
         return
     if isinstance(obj, types.FunctionType):
         def all_names(code):             # incl. nested lambdas/inner defs
@@ -790,14 +903,24 @@ def _fp_update(h, obj, depth: int = 0, fifo_depth: bool = True) -> None:
         code = obj.__code__
         h.update(b"fn(")
         h.update(code.co_code)
-        _fp_update(h, code.co_consts, depth + 1, fifo_depth)
-        h.update(repr(code.co_names).encode())
-        _fp_update(h, obj.__defaults__, depth + 1, fifo_depth)
-        _fp_update(h, obj.__kwdefaults__, depth + 1, fifo_depth)
+        _fp_update(h, code.co_consts, depth + 1, fifo_depth, memo)
+        # every module a factory stamps out shares one code object, so the
+        # names repr (like the consts tuple above, which memo-hits by id)
+        # is worth caching across the design walk
+        nkey = (id(code), "conames") if memo is not None else None
+        names_b = memo.get(nkey) if nkey is not None else None
+        if names_b is None:
+            names_b = repr(code.co_names).encode()
+            if nkey is not None:
+                memo[nkey] = names_b
+        h.update(names_b)
+        _fp_update(h, obj.__defaults__, depth + 1, fifo_depth, memo)
+        _fp_update(h, obj.__kwdefaults__, depth + 1, fifo_depth, memo)
         if obj.__closure__:
             for cell in obj.__closure__:
                 try:
-                    _fp_update(h, cell.cell_contents, depth + 1, fifo_depth)
+                    _fp_update(h, cell.cell_contents, depth + 1, fifo_depth,
+                               memo)
                 except ValueError:
                     h.update(b"<empty>")
         # module-level state the body reads is design content too (a
@@ -805,51 +928,133 @@ def _fp_update(h, obj, depth: int = 0, fifo_depth: bool = True) -> None:
         # when the read happens inside a nested lambda/inner def; modules
         # hash by name only — importing numpy is not design identity
         g = obj.__globals__
-        for name in sorted(all_names(code) & set(g)):
-            h.update(name.encode())
-            v = g[name]
-            if isinstance(v, types.ModuleType):
-                h.update(v.__name__.encode())
-            else:
-                _fp_update(h, v, depth + 1, fifo_depth)
+        # the referenced-global name list depends only on (code, globals)
+        # — shared by every module a generator factory stamps out — so
+        # memoize it alongside the capture digests
+        gkey = (id(code), id(g), "gnames") if memo is not None else None
+        if gkey is not None and gkey in memo:
+            gnames = memo[gkey]
+        else:
+            gnames = sorted(all_names(code) & set(g))
+            if gkey is not None:
+                memo[gkey] = gnames
+        # Merkle-wrap the whole globals contribution unconditionally (so
+        # the bytes don't depend on whether a memo is in use) and memoize
+        # it per (code, globals, depth): every module a factory stamps out
+        # references the same helpers through the same dict, so after the
+        # first module this entire section is one dict get + one update
+        gdkey = (id(code), id(g), depth, "gdig") if memo is not None else None
+        gdig = memo.get(gdkey) if gdkey is not None else None
+        if gdig is None:
+            gh = hashlib.sha256()
+            for name in gnames:
+                gh.update(name.encode())
+                v = g[name]
+                if isinstance(v, types.ModuleType):
+                    gh.update(v.__name__.encode())
+                else:
+                    # per-value digests memo too: distinct code objects
+                    # (different factories) still share helper values
+                    vkey = (id(v), depth, "g") if memo is not None else None
+                    digest = memo.get(vkey) if vkey is not None else None
+                    if digest is None:
+                        sub = hashlib.sha256()
+                        _fp_update(sub, v, depth + 1, fifo_depth, memo)
+                        digest = sub.digest()
+                        if vkey is not None:
+                            memo[vkey] = digest
+                    gh.update(digest)
+            gdig = gh.digest()
+            if gdkey is not None:
+                memo[gdkey] = gdig
+        h.update(gdig)
         h.update(b")")
     elif isinstance(obj, types.CodeType):
         h.update(b"code(")
         h.update(obj.co_code)
-        _fp_update(h, obj.co_consts, depth + 1, fifo_depth)
+        _fp_update(h, obj.co_consts, depth + 1, fifo_depth, memo)
         h.update(repr(obj.co_names).encode())
         h.update(b")")
     elif isinstance(obj, Fifo):
-        if fifo_depth:
+        if fifo_depth == "blind":
+            # position-free placeholder: the delta layer's *body* hash must
+            # not change when a FIFO is renamed or re-depthed — only the
+            # bytecode/constants matter there (``repro.delta.fingerprint``)
+            h.update(b"Fifo(_)")
+        elif fifo_depth:
             h.update(f"Fifo({obj.name},{obj.depth})".encode())
         else:
             h.update(f"Fifo({obj.name})".encode())
     elif isinstance(obj, np.ndarray):
         h.update(obj.tobytes())
     elif isinstance(obj, (list, tuple)):
-        h.update(b"(" if isinstance(obj, tuple) else b"[")
+        key = (id(obj), depth) if memo is not None else None
+        if key is not None and key in memo:
+            h.update(memo[key])
+            return
+        if _fp_plain(obj, depth):
+            # pure primitive data (e.g. generated macro scripts): one repr
+            # is deterministic content — same bytes with or without memo
+            data = repr(obj).encode()
+            if key is not None:
+                memo[key] = data
+            h.update(data)
+            return
+        sub = hashlib.sha256()
+        sub.update(b"(" if isinstance(obj, tuple) else b"[")
         for x in obj:
-            _fp_update(h, x, depth + 1, fifo_depth)
-            h.update(b",")
-        h.update(b"]")
+            _fp_update(sub, x, depth + 1, fifo_depth, memo)
+            sub.update(b",")
+        sub.update(b"]")
+        digest = sub.digest()
+        if key is not None:
+            memo[key] = digest
+        h.update(digest)
     elif isinstance(obj, dict):
-        h.update(b"{")
+        key = (id(obj), depth) if memo is not None else None
+        if key is not None and key in memo:
+            h.update(memo[key])
+            return
+        sub = hashlib.sha256()
+        sub.update(b"{")
         for k in obj:
-            _fp_update(h, k, depth + 1, fifo_depth)
-            h.update(b":")
-            _fp_update(h, obj[k], depth + 1, fifo_depth)
-        h.update(b"}")
+            _fp_update(sub, k, depth + 1, fifo_depth, memo)
+            sub.update(b":")
+            _fp_update(sub, obj[k], depth + 1, fifo_depth, memo)
+        sub.update(b"}")
+        digest = sub.digest()
+        if key is not None:
+            memo[key] = digest
+        h.update(digest)
     elif type(obj).__repr__ is object.__repr__:
         # default repr would embed the instance address (a new key every
         # builder call — the cache would never hit): hash the class plus
         # the attribute dict by content instead
         h.update(type(obj).__qualname__.encode())
         try:
-            _fp_update(h, vars(obj), depth + 1, fifo_depth)
+            _fp_update(h, vars(obj), depth + 1, fifo_depth, memo)
         except TypeError:                # __slots__ etc.: accept misses
             h.update(repr(obj).encode())
     else:
         h.update(repr(obj).encode())
+
+
+def module_content_hash(fn, fifo_depth=True,
+                        memo: Optional[dict] = None) -> str:
+    """Content hash of one module generator function (sha256 hex digest).
+
+    Hashes bytecode + constants + defaults + closure contents + referenced
+    globals via :func:`_fp_update`.  ``fifo_depth`` selects how captured
+    FIFOs enter the hash: ``True`` by name+depth (the exact-key flavor),
+    ``False`` by name only (the hybrid cache's depth-insensitive flavor),
+    ``"blind"`` as a position-free placeholder (the delta layer's *body*
+    hash — invariant under FIFO renames and re-depthing).  ``memo`` is a
+    per-design shared-capture digest cache (see :func:`_fp_update`); all
+    modules of one design must share one memo *per flavor*.
+    """
+    h = hashlib.sha256()
+    _fp_update(h, fn, fifo_depth=fifo_depth, memo=memo)
+    return h.hexdigest()
 
 
 def program_fingerprint(program: Program) -> str:
@@ -865,17 +1070,28 @@ def program_fingerprint(program: Program) -> str:
     service's warm cache (``repro.sweep.cache.GraphCache``) needs to serve
     repeat requests for a design without re-recording or re-hoisting
     anything.
+
+    The key composes per-FIFO ``(name, depth)`` rows with per-module
+    *depth-insensitive* content digests (:func:`module_content_hash` with
+    ``fifo_depth=False``): the depth vector is design-level state and is
+    hashed exactly once via the FIFO rows, not once per capturing module.
+    That keeps the key depth-sensitive while letting
+    ``repro.delta.fingerprint`` reconstruct the same key from its
+    :class:`ModuleFingerprint` table with a single hash walk per module —
+    an exact-key hit in the delta-aware cache lookup is literally this
+    digest matching.
     """
-    import hashlib
     h = hashlib.sha256()
     h.update(program.name.encode())
     for f in program.fifos:
         h.update(b"|F")
         _fp_update(h, f)
+    memo: dict = {}      # shared captures (e.g. one FIFO list) hash once
     for m in program.modules:
         h.update(b"|M")
         h.update(m.name.encode())
-        _fp_update(h, m.fn)
+        h.update(module_content_hash(m.fn, fifo_depth=False,
+                                     memo=memo).encode())
     return h.hexdigest()
 
 
@@ -894,17 +1110,23 @@ def to_compiled_graph(ct: CompiledTrace):
     ``resimulate``/``resimulate_batch`` call skips re-interpretation.
     """
     from .incremental import CompiledGraph
-    fifos = [(w.copy(), r.copy(), np.ones(len(w), dtype=bool))
+    # CompiledGraph arrays are immutable by contract (consumers — the
+    # solvers, _batch_arrays, graph_blob — only read or build permuted
+    # copies), so the graph *shares* the trace's arrays rather than
+    # copying: at corpus scale the per-FIFO copies alone were >1 ms per
+    # delta patch.  Chains are slices of one arange for the same reason.
+    fifos = [(w, r, np.ones(len(w), dtype=bool))
              for w, r in zip(ct.fifo_w_nodes, ct.fifo_r_nodes)]
+    ids = np.arange(ct.n, dtype=np.int64)
     z = np.zeros(0, np.int64)
     return CompiledGraph(
         n=ct.n,
-        raw_dst=ct.raw_dst.copy(),
-        raw_src=ct.raw_src.copy(),
+        raw_dst=ct.raw_dst,
+        raw_src=ct.raw_src,
         raw_w=np.ones(len(ct.raw_dst), np.int64),
-        base=ct.base.copy(),
-        chains=[np.arange(lo, hi, dtype=np.int64) for (lo, hi) in ct.slices],
-        seq_w=ct.seq_w.copy(),
+        base=ct.base,
+        chains=[ids[lo:hi] for (lo, hi) in ct.slices],
+        seq_w=ct.seq_w,
         fifos=fifos,
         c_kind=z, c_fifo=z, c_seq=z, c_src=z,
         c_out=np.zeros(0, dtype=bool),
@@ -932,13 +1154,28 @@ def simulate_traced(program: Program,
     depths = program.depths()
     war_dst, war_src = ct.war_edges(depths)
     times, sweeps = _solve_times(ct, war_dst, war_src)
-    cycles = int(times.max()) if ct.n else 0
+    return build_traced_result(program, rec, ct, times, war_dst, war_src,
+                               sweeps)
 
-    # populate an engine shell so downstream consumers (incremental, DSE,
-    # taxonomy, kernels.finalize_times) see exactly the generator engine's
-    # end state
+
+def build_traced_result(program: Program, rec: RecordedTrace,
+                        ct: CompiledTrace, times: np.ndarray,
+                        war_dst: np.ndarray, war_src: np.ndarray,
+                        sweeps: int, graph=None) -> SimResult:
+    """Assemble the trace path's :class:`SimResult` + engine shell.
+
+    Shared by :func:`simulate_traced` (cold record) and
+    ``repro.delta.patch`` (spliced re-record): given a solved trace, build
+    an engine shell so downstream consumers (incremental, DSE, taxonomy,
+    ``kernels.finalize_times``) see exactly the generator engine's end
+    state.  ``graph`` optionally supplies an already-built
+    ``to_compiled_graph(ct)`` (the patch path builds one for verification
+    anyway) so it isn't rebuilt here.
+    """
+    depths = program.depths()
+    cycles = int(times.max()) if ct.n else 0
     from .engine import OmniSim
-    engine = OmniSim(program)
+    engine = OmniSim(program, _fifo_shells=True)
     engine.outputs = dict(rec.outputs)
     module_arr = np.empty(ct.n, dtype=np.int64)
     for m, (lo, hi) in enumerate(ct.slices):
@@ -948,10 +1185,12 @@ def simulate_traced(program: Program,
         tbl = engine.fifos[f.fid]
         w_nodes = ct.fifo_w_nodes[f.fid]
         r_nodes = ct.fifo_r_nodes[f.fid]
-        tbl._w_nodes = w_nodes.astype(np.int64, copy=True)
+        # share the trace's node arrays: the tables never write below
+        # ``_nw``/``_nr`` (growth reallocates), so no copy is needed
+        tbl._w_nodes = np.asarray(w_nodes, dtype=np.int64)
         tbl._w_times = times[w_nodes]
         tbl._nw = len(w_nodes)
-        tbl._r_nodes = r_nodes.astype(np.int64, copy=True)
+        tbl._r_nodes = np.asarray(r_nodes, dtype=np.int64)
         tbl._r_times = times[r_nodes]
         tbl._nr = len(r_nodes)
         tbl.values.extend(rec.leftovers[f.fid])
@@ -966,7 +1205,7 @@ def simulate_traced(program: Program,
     stats.resumes = rec.activations          # scheduler (re)activations
     stats.skipped_probes = rec.skipped_probes
     stats.quiescence_rounds = sweeps
-    engine._incr_cache = to_compiled_graph(ct)
+    engine._incr_cache = graph if graph is not None else to_compiled_graph(ct)
     engine._trace = rec.periodize()          # compact steady-state storage
     return SimResult(
         program=program.name,
@@ -1361,6 +1600,12 @@ class HybridCache:
         self._full.move_to_end(key)
         while len(self._full) > self.max_full:
             self._full.popitem(last=False)
+
+    def peek_full(self, key: str) -> Optional[_FullRun]:
+        """Non-counting, non-LRU-touching read — the sweep cache spills
+        verified whole-run entries alongside its ``CacheEntry`` without
+        perturbing hit/miss stats (``sweep/cache.py``)."""
+        return self._full.get(key)
 
 
 class _HMod:

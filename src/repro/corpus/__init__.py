@@ -10,12 +10,14 @@ from .builders import MOD, build_case, build_poll_case  # noqa: F401
 from .conformance import (ENGINE_PATHS, ConformanceReport,  # noqa: F401
                           check_conformance, fifo_digest, result_record,
                           rtl_crosscheck)
-from .generator import CorpusCase, generate  # noqa: F401
+from .generator import (CorpusCase, EDIT_KINDS, EditPair,  # noqa: F401
+                        PATCHABLE_KINDS, edit_pairs, generate)
 from .spec import (BENCH_SPEC, BLOCKING_SPEC, Choice,  # noqa: F401
                    CorpusSpec, DEFAULT_SPEC, IntRange)
 
 __all__ = [
     "generate", "CorpusCase",
+    "edit_pairs", "EditPair", "EDIT_KINDS", "PATCHABLE_KINDS",
     "CorpusSpec", "IntRange", "Choice",
     "DEFAULT_SPEC", "BLOCKING_SPEC", "BENCH_SPEC",
     "build_case", "build_poll_case", "MOD",

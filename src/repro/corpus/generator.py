@@ -41,7 +41,7 @@ from repro.core.axi import AxiPort, make_memory
 from repro.core.program import Program
 
 from .builders import _interp
-from .spec import DEFAULT_SPEC, CorpusSpec
+from .spec import BLOCKING_SPEC, DEFAULT_SPEC, CorpusSpec
 
 # macro -> (positions read from, positions written to); a position is an
 # index into the instruction tuple holding a fid (or tuple of fids);
@@ -340,6 +340,36 @@ _CLUSTERS = {
 }
 
 
+def _builder_from_rows(name: str, declared: str,
+                       fifo_rows: tuple,
+                       module_rows: tuple) -> Callable[[], Program]:
+    """Freeze immutable (fifo, module) row tuples into a Program builder.
+
+    Both :func:`generate` and :func:`edit_pairs` close over this one
+    function, so a design and a row-level transformation of it hash their
+    module bodies through identical bytecode — ``program_fingerprint`` and
+    the per-module delta fingerprints differ only where the *rows* differ.
+    """
+    def builder() -> Program:
+        prog = Program(name, declared_type=declared)
+        fifos = [prog.fifo(nm, d) for nm, d in fifo_rows]
+        for entry in module_rows:
+            if entry[0] == "interp":
+                _, mname, script = entry
+                prog.add_module(mname, _interp(mname, script, fifos))
+            else:
+                _, mname, fids, size, lat, n_bursts = entry
+                port = AxiPort(ar=fifos[fids[0]], r=fifos[fids[1]],
+                               aw=fifos[fids[2]], w=fifos[fids[3]],
+                               b=fifos[fids[4]])
+                data = [(i * 7 + 3) % 97 for i in range(size)]
+                make_memory(prog, port, data, read_latency=lat,
+                            write_latency=8, name=mname,
+                            n_reads=n_bursts, n_writes=n_bursts)
+        return prog
+    return builder
+
+
 def generate(seed: int, scale: int = 32,
              spec: CorpusSpec = DEFAULT_SPEC) -> CorpusCase:
     """Generate a corpus design with roughly ``scale`` modules.
@@ -394,23 +424,7 @@ def generate(seed: int, scale: int = 32,
         else ("aximem", e[1], e[2], e[3], e[4], e[5])
         for e in plan.modules)
 
-    def builder() -> Program:
-        prog = Program(name, declared_type=declared)
-        fifos = [prog.fifo(nm, d) for nm, d in fifo_rows]
-        for entry in module_rows:
-            if entry[0] == "interp":
-                _, mname, script = entry
-                prog.add_module(mname, _interp(mname, script, fifos))
-            else:
-                _, mname, fids, size, lat, n_bursts = entry
-                port = AxiPort(ar=fifos[fids[0]], r=fifos[fids[1]],
-                               aw=fifos[fids[2]], w=fifos[fids[3]],
-                               b=fifos[fids[4]])
-                data = [(i * 7 + 3) % 97 for i in range(size)]
-                make_memory(prog, port, data, read_latency=lat,
-                            write_latency=8, name=mname,
-                            n_reads=n_bursts, n_writes=n_bursts)
-        return prog
+    builder = _builder_from_rows(name, declared, fifo_rows, module_rows)
 
     meta = dict(modules=plan.n_modules, fifos=len(plan.fifo_rows),
                 clusters=[c["motif"] for c in clusters],
@@ -418,3 +432,174 @@ def generate(seed: int, scale: int = 32,
                 bridges=sum(1 for c in clusters if c["bridged"]))
     return CorpusCase(name=name, seed=seed, scale=scale, spec=spec,
                       builder=builder, meta=meta, _plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# edit pairs: (base, edited) designs spanning every structural-delta class
+# ---------------------------------------------------------------------------
+@dataclass
+class EditPair:
+    """One corpus edit: a base design, an edited variant, and what the
+    delta subsystem is expected to do with it.
+
+    ``expect`` is ``"patched"`` for edits the trace patcher must serve by
+    per-module splicing (pure timing/body edits, FIFO re-depths) and
+    ``"cold"`` for edits it must reject to a cold rebuild (value changes,
+    renames, interface/topology changes).  Either way the served result
+    must be bit-identical to a from-scratch simulation of ``edited()``.
+    """
+    kind: str
+    name: str
+    base: Callable[[], Program]
+    edited: Callable[[], Program]
+    expect: str
+    detail: str = ""
+
+
+#: every delta class the corpus can exercise, in emission order
+EDIT_KINDS = ("delay", "retype", "value", "rename", "interface",
+              "added", "removed")
+
+#: kinds the patch layer must serve without a cold rebuild
+PATCHABLE_KINDS = ("delay", "retype")
+
+
+def _edit_script(module_rows: tuple, mi: int, fn) -> tuple:
+    """Return ``module_rows`` with module ``mi``'s script rewritten by
+    ``fn(list(script)) -> list``."""
+    rows = list(module_rows)
+    _, mname, script = rows[mi]
+    rows[mi] = ("interp", mname, tuple(fn(list(script))))
+    return tuple(rows)
+
+
+def _find_w1(module_rows: tuple):
+    """Locate a literal single-write macro: (module index, script index)."""
+    for mi, entry in enumerate(module_rows):
+        if entry[0] != "interp":
+            continue
+        for si, ins in enumerate(entry[2]):
+            if ins[0] == "W1":
+                return mi, si
+    return None
+
+
+def edit_pairs(seed: int, scale: int = 32,
+               spec: CorpusSpec = BLOCKING_SPEC,
+               kinds: Tuple[str, ...] = EDIT_KINDS,
+               max_probes: int = 64) -> List[EditPair]:
+    """Derive (base, edited) design pairs covering the delta taxonomy.
+
+    Probes seeds ``seed, seed+1, ...`` (up to ``max_probes``) for a live,
+    trace-recordable base design that has at least one macro-script module
+    and one literal ``W1`` write (a cluster bridge), then emits one
+    :class:`EditPair` per requested kind as a pure row-level
+    transformation of the frozen plan:
+
+      * ``delay``     — insert a ``("D", k)`` stall into one module body
+        (BODY_EDITED; must patch);
+      * ``retype``    — one FIFO depth + 1 (fifo RETYPED; must patch —
+        deepening a FIFO never removes behavior);
+      * ``value``     — bump a bridge's written constant (functional edit;
+        the write-stream gate must reject to cold);
+      * ``rename``    — rename a FIFO (not patchable by contract);
+      * ``interface`` — add a FIFO, a write of it to an existing module
+        and a fresh reader module (INTERFACE_CHANGED + ADDED);
+      * ``added`` / ``removed`` — a standalone writer/reader pair over a
+        new FIFO appears / disappears.
+
+    Base and edited builders share the Program name — only content
+    distinguishes their fingerprints, exactly like a user edit.
+    """
+    from repro.core.trace import TraceUnsupported, record_trace
+
+    unknown = set(kinds) - set(EDIT_KINDS)
+    if unknown:
+        raise ValueError(f"unknown edit kinds: {sorted(unknown)}")
+
+    case = fifo_rows = module_rows = declared = w1 = None
+    for off in range(max_probes):
+        cand = generate(seed + off, scale=scale, spec=spec)
+        rows = tuple(
+            ("interp", e[1], tuple(e[2])) if e[0] == "interp"
+            else ("aximem", e[1], e[2], e[3], e[4], e[5])
+            for e in cand._plan.modules)
+        w1_at = _find_w1(rows)
+        if w1_at is None:
+            continue
+        try:
+            record_trace(cand.builder())
+        except TraceUnsupported:
+            continue
+        case, module_rows, w1 = cand, rows, w1_at
+        fifo_rows = tuple(cand._plan.fifo_rows)
+        declared = cand.meta["declared"]
+        break
+    if case is None:
+        raise RuntimeError(
+            f"no live editable base design within {max_probes} probes of "
+            f"seed {seed} (scale {scale})")
+
+    rng = random.Random(seed * 99_991 + scale * 101 + 0xED17)
+    interp_idx = [i for i, e in enumerate(module_rows) if e[0] == "interp"]
+    mk = lambda fr, mr: _builder_from_rows(case.name, declared, fr, mr)
+    base = mk(fifo_rows, module_rows)
+    pairs: List[EditPair] = []
+
+    for kind in kinds:
+        if kind == "delay":
+            mi = rng.choice(interp_idx)
+            k = 1 + rng.randrange(9)
+            pos = rng.randrange(len(module_rows[mi][2]) + 1)
+            edited_rows = _edit_script(
+                module_rows, mi, lambda s: s[:pos] + [("D", k)] + s[pos:])
+            pairs.append(EditPair(
+                kind, case.name, base, mk(fifo_rows, edited_rows),
+                "patched", f"+{k}-cycle stall in {module_rows[mi][1]}"))
+        elif kind == "retype":
+            fi = rng.randrange(len(fifo_rows))
+            fr = list(fifo_rows)
+            fr[fi] = (fr[fi][0], fr[fi][1] + 1)
+            pairs.append(EditPair(
+                kind, case.name, base, mk(tuple(fr), module_rows),
+                "patched", f"FIFO {fifo_rows[fi][0]} depth +1"))
+        elif kind == "value":
+            mi, si = w1
+            def bump(s, si=si):
+                op, fid, v = s[si]
+                s[si] = (op, fid, v + 1)
+                return s
+            edited_rows = _edit_script(module_rows, mi, bump)
+            pairs.append(EditPair(
+                kind, case.name, base, mk(fifo_rows, edited_rows),
+                "cold", f"bridge value +1 in {module_rows[mi][1]}"))
+        elif kind == "rename":
+            fi = rng.randrange(len(fifo_rows))
+            fr = list(fifo_rows)
+            fr[fi] = (fr[fi][0] + "_rn", fr[fi][1])
+            pairs.append(EditPair(
+                kind, case.name, base, mk(tuple(fr), module_rows),
+                "cold", f"FIFO {fifo_rows[fi][0]} renamed"))
+        elif kind == "interface":
+            nf = len(fifo_rows)
+            fr = fifo_rows + (("xtra_if", 1),)
+            mi = rng.choice(interp_idx)
+            mr = _edit_script(module_rows, mi,
+                              lambda s: s + [("W1", nf, 41)])
+            mr = mr + (("interp", "xrd_if", (("R1", nf),)),)
+            pairs.append(EditPair(
+                kind, case.name, base, mk(fr, mr), "cold",
+                f"new port on {module_rows[mi][1]} + reader module"))
+        elif kind in ("added", "removed"):
+            nf = len(fifo_rows)
+            fr = fifo_rows + (("xtra_sb", 1),)
+            mr = module_rows + (("interp", "xwr_sb", (("W1", nf, 9),)),
+                                ("interp", "xrd_sb", (("R1", nf),)))
+            big, small = mk(fr, mr), base
+            if kind == "added":
+                pairs.append(EditPair(kind, case.name, small, big, "cold",
+                                      "standalone writer/reader pair added"))
+            else:
+                pairs.append(EditPair(kind, case.name, big, small, "cold",
+                                      "standalone writer/reader pair removed"))
+    return pairs

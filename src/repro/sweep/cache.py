@@ -13,7 +13,8 @@ content-addressed design keys (:func:`repro.core.program_fingerprint`) to
     hoisted from it (pre-built by ``core/trace.py`` for traced runs);
   * ``batch``  — the chain-major ``_BatchArrays`` view with its no-WAR
     seed fixpoint and the per-(FIFO, depth) WAR column cache, which keeps
-    *warming itself* as more depth vectors are served.
+    *warming itself* as more depth vectors are served (built lazily on
+    first solve, so interactive edit-session updates don't pay for it).
 
 Keys deliberately exclude nothing the closure captures: two Programs built
 by the same builder with the same arguments share an entry; changing any
@@ -38,33 +39,55 @@ import pickle
 import threading
 import time as _time
 from collections import OrderedDict
-from typing import Callable, Dict, Optional, Union
+from typing import Callable, Dict, NamedTuple, Optional, Union
 
 from ..core.dse import _batch_arrays, program_mutation_lock
 from ..core.engine import simulate
 from ..core.incremental import CompiledGraph, compile_graph
 from ..core.program import Program, SimResult
-from ..core.trace import program_fingerprint
+from ..core.trace import HybridCache, program_fingerprint
+from ..delta.fingerprint import DesignDelta, DesignFingerprint, diff
+from ..delta.patch import DeltaState, apply_patch, cold_build
 
 
 class CacheEntry:
-    """One warm design: base run + hoisted graph + batch view."""
+    """One warm design: base run + hoisted graph + batch view.
 
-    __slots__ = ("key", "result", "graph", "batch", "hits", "build_s",
-                 "lock", "_graph_blob")
+    ``full_run`` optionally spills the design's verified whole-run
+    ``_FullRun`` entry (PR 9's hybrid replay artifact) alongside the
+    graph: a cache hit reinstalls it into the shared
+    :class:`~repro.core.trace.HybridCache`, so one tenant's completed
+    dynamic run warms every other tenant's fallback re-simulations."""
+
+    __slots__ = ("key", "result", "graph", "_batch", "hits", "build_s",
+                 "lock", "_graph_blob", "full_run")
 
     def __init__(self, key: str, result: SimResult, graph: CompiledGraph,
-                 batch, build_s: float = 0.0):
+                 batch=None, build_s: float = 0.0):
         self.key = key
         self.result = result
         self.graph = graph
-        self.batch = batch
+        self._batch = batch
         self.hits = 0
         self.build_s = build_s
         # serializes engine-touching work (fallback re-simulation mutates
         # Program FIFO depths in place and restores them)
         self.lock = threading.Lock()
         self._graph_blob: Optional[bytes] = None
+        self.full_run = None
+
+    @property
+    def batch(self):
+        """Chain-major ``_BatchArrays`` view, built on first use.
+
+        Entry construction defers this (it includes the no-WAR seed
+        fixpoint — the most expensive part of warming a design) so
+        interactive edit-session updates pay only for classification and
+        patching; the first sweep solve against the entry builds it via
+        the same ``_batch_arrays`` memo the shard solvers use."""
+        if self._batch is None:
+            self._batch = _batch_arrays(self.graph)
+        return self._batch
 
     @property
     def program(self) -> Program:
@@ -99,17 +122,44 @@ class CacheEntry:
         return self._graph_blob
 
 
-class GraphCache:
-    """Bounded LRU of warm :class:`CacheEntry` objects, keyed by content."""
+class DeltaLookup(NamedTuple):
+    """Result of the delta-aware lookup tiers (:meth:`GraphCache.get_or_patch`).
 
-    def __init__(self, capacity: int = 8):
+    ``mode`` is the reuse tier that answered: ``"exact"`` (whole-key hit),
+    ``"patched"`` (per-module partial hit) or ``"cold"`` (miss / rejected
+    patch).  ``state`` is the refreshed delta snapshot when one exists.
+    """
+
+    entry: CacheEntry
+    mode: str
+    reason: str
+    state: Optional[DeltaState]
+    reused_modules: int
+    total_modules: int
+
+
+class GraphCache:
+    """Bounded LRU of warm :class:`CacheEntry` objects, keyed by content.
+
+    Owns a shared :class:`~repro.core.trace.HybridCache`: cold builds of
+    dynamic designs thread it into ``simulate`` so their verified
+    ``_FullRun`` entries spill onto the cache entry and reinstall on every
+    hit — served tenants warm each other's hybrid replays.
+    """
+
+    def __init__(self, capacity: int = 8,
+                 hybrid: Optional[HybridCache] = None):
         assert capacity >= 1
         self.capacity = capacity
         self._entries: "OrderedDict[str, CacheEntry]" = OrderedDict()
         self._lock = threading.Lock()
+        self.hybrid = hybrid if hybrid is not None else HybridCache(
+            max_full=max(8, 2 * capacity))
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.delta_hits = 0
+        self.delta_rejects = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -124,6 +174,12 @@ class GraphCache:
             self._entries.move_to_end(key)
             self.hits += 1
             entry.hits += 1
+            if entry.full_run is not None:
+                # reinstall the spilled whole-run entry: a fallback re-sim
+                # of this design at these depths replays instead of
+                # re-interpreting (dict ops are GIL-atomic; peek/store
+                # race at worst re-stores an identical verified entry)
+                self.hybrid.store_full(key, entry.full_run)
             return entry
 
     def insert(self, entry: CacheEntry) -> CacheEntry:
@@ -166,12 +222,74 @@ class GraphCache:
                 return entry
             t0 = _time.perf_counter()
             if base is None:
-                base = simulate_fn(program)
-            graph = compile_graph(base.graph)
-            batch = _batch_arrays(graph)
-            entry = CacheEntry(key, base, graph, batch,
-                               build_s=_time.perf_counter() - t0)
+                if simulate_fn is simulate:
+                    # default path: thread the shared HybridCache so a
+                    # dynamic design's verified _FullRun lands in it
+                    base = simulate(program, hybrid_cache=self.hybrid)
+                else:
+                    base = simulate_fn(program)
+            entry = self._entry_from(key, base, t0)
             return self.insert(entry)
+
+    def _entry_from(self, key: str, base: SimResult,
+                    t0: float) -> CacheEntry:
+        """Hoist the compiled graph from a base run and spill the hybrid
+        whole-run entry (if the build produced one) onto the entry.  The
+        batch view is deliberately *not* built here — see
+        :attr:`CacheEntry.batch`."""
+        graph = compile_graph(base.graph)
+        entry = CacheEntry(key, base, graph,
+                           build_s=_time.perf_counter() - t0)
+        entry.full_run = self.hybrid.peek_full(key)
+        return entry
+
+    def get_or_patch(self, program: Program, fps: DesignFingerprint,
+                     state: Optional[DeltaState],
+                     delta: Optional["DesignDelta"] = None) -> DeltaLookup:
+        """Delta-aware lookup: exact-key hit → per-module patch → cold.
+
+        The tiers, in order: (1) ``fps.key`` already cached (another
+        tenant — or a previous edit — built this exact design): reuse it
+        outright.  (2) ``state`` holds a recorded snapshot and the delta
+        from it is patchable: re-record only the edited modules, splice,
+        verify (``repro.delta.patch``) — a verification reject falls
+        through.  (3) cold rebuild (capturing a fresh snapshot for
+        traceable designs).  ``delta_hits``/``delta_rejects`` count tier-2
+        outcomes and surface in :meth:`stats`.
+
+        ``delta`` optionally supplies the caller's already-classified
+        ``diff(state.fps, fps)`` (the edit session computes one for its
+        outcome report) so it isn't recomputed here.
+        """
+        total = len(fps.modules)
+        with program_mutation_lock(program):
+            entry = self.lookup(fps.key)
+            if entry is not None:
+                return DeltaLookup(entry, "exact", "", None, total, total)
+            t0 = _time.perf_counter()
+            reason = ""
+            if state is not None:
+                if delta is None:
+                    delta = diff(state.fps, fps)
+                if delta.patchable:
+                    out = apply_patch(state, program, delta=delta,
+                                      new_fps=fps)
+                    if out.ok:
+                        entry = self.insert(
+                            self._entry_from(fps.key, out.result, t0))
+                        with self._lock:
+                            self.delta_hits += 1
+                        return DeltaLookup(entry, "patched", "", out.state,
+                                           out.reused_modules, total)
+                    reason = out.reason
+                else:
+                    reason = delta.reason
+                with self._lock:
+                    self.delta_rejects += 1
+            base, new_state = cold_build(program, hybrid_cache=self.hybrid,
+                                         fps=fps)
+            entry = self.insert(self._entry_from(fps.key, base, t0))
+            return DeltaLookup(entry, "cold", reason, new_state, 0, total)
 
     def stats(self) -> Dict[str, float]:
         with self._lock:
@@ -183,4 +301,8 @@ class GraphCache:
                 "misses": self.misses,
                 "evictions": self.evictions,
                 "hit_rate": self.hits / total if total else 0.0,
+                "delta_hits": self.delta_hits,
+                "delta_rejects": self.delta_rejects,
+                "full_runs": sum(1 for e in self._entries.values()
+                                 if e.full_run is not None),
             }

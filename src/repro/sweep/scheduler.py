@@ -250,7 +250,8 @@ class BlockScheduler:
                  shard_timeout_s: Optional[float] = 30.0,
                  quarantine: Optional[DesignQuarantine] = None,
                  max_pool_respawns: int = 2,
-                 jax_interpret: bool = True):
+                 jax_interpret: bool = True,
+                 memo_capacity: int = 4096):
         assert mode in ("serial", "thread", "process"), mode
         self.block = max(int(block), 1)
         self.shards = max(int(shards), 1)
@@ -274,6 +275,18 @@ class BlockScheduler:
         self._pool_blobs: "OrderedDict[str, bytes]" = OrderedDict()
         self._pool_gen = 0
         self._pool = self._make_pool()
+        # cross-block memo of exact repeat configs: (design key, depth-row
+        # bytes) -> (status, cycles, violated).  Content-addressed like the
+        # graph cache, so it stays valid across entry eviction/rebuild and
+        # across design edits (an edited design has a new key).  Bounded
+        # LRU; 0 disables.  FAULTED/TIMED_OUT verdicts are transient and
+        # never memoized.
+        self.memo_capacity = max(int(memo_capacity), 0)
+        self._memo: "OrderedDict[tuple, tuple]" = OrderedDict()
+        # shared HybridCache (set by SweepService from its GraphCache):
+        # threaded into fallback re-simulations so repeat fallbacks of a
+        # dynamic design replay its spilled verified whole run
+        self.hybrid = None
         # counters (guarded by _cv's lock)
         self.stats_blocks = 0
         self.stats_blocks_interactive = 0
@@ -288,6 +301,7 @@ class BlockScheduler:
         self.stats_timed_out_rows = 0    # rows terminally TIMED_OUT
         self.stats_pool_respawns = 0
         self.stats_blob_reships = 0      # need-blob round trips (process)
+        self.stats_memo_hits = 0         # rows answered without a solve
 
     # --------------------------------------------------------------- pool
     def _make_pool(self):
@@ -684,8 +698,45 @@ class BlockScheduler:
         deadlines = [req.t_deadline for (req, _i) in blk.items
                      if req.t_deadline is not None]
         t_deadline = min(deadlines) if deadlines else None
-        status_u, cycles_u, violated_u, notes = self._solve_unique(
-            entry, Du, t_deadline)
+        # cross-block memo: identical (design, depth-row) pairs seen in any
+        # earlier block are answered without a solver call — only the
+        # residual rows reach _solve_unique
+        U = len(Du)
+        status_u = np.empty(U, dtype=np.int8)
+        cycles_u = np.full(U, -1, dtype=np.int64)
+        violated_u = np.zeros(U, dtype=np.int64)
+        notes: Dict[int, str] = {}
+        memo_hit = np.zeros(U, dtype=bool)
+        if self.memo_capacity:
+            with self._cv:
+                for u in range(U):
+                    mk = (entry.key, Du[u].tobytes())
+                    got = self._memo.get(mk)
+                    if got is not None:
+                        self._memo.move_to_end(mk)
+                        status_u[u], cycles_u[u], violated_u[u] = got
+                        memo_hit[u] = True
+                        self.stats_memo_hits += 1
+        solve_idx = np.flatnonzero(~memo_hit)
+        if len(solve_idx):
+            st, cy, vi, sub_notes = self._solve_unique(
+                entry, Du[solve_idx], t_deadline)
+            status_u[solve_idx] = st
+            cycles_u[solve_idx] = cy
+            violated_u[solve_idx] = vi
+            for su, note in sub_notes.items():
+                notes[int(solve_idx[su])] = note
+            if self.memo_capacity:
+                with self._cv:
+                    for su in range(len(solve_idx)):
+                        s = int(st[su])
+                        if s == FAULTED or s == TIMED_OUT:
+                            continue
+                        self._memo[(entry.key,
+                                    Du[solve_idx[su]].tobytes())] = (
+                            s, int(cy[su]), int(vi[su]))
+                    while len(self._memo) > self.memo_capacity:
+                        self._memo.popitem(last=False)
 
         # a failed unique row pays for its exact fallback only if a LIVE
         # request owning it asked for fallback (a cancelled or expired
@@ -706,14 +757,16 @@ class BlockScheduler:
         try:
             results_u, reasons_u = materialize_block(
                 entry.result, Du, status_u, cycles_u, violated_u, fb_mask,
-                engine_label="omnisim-sweep", lock=entry.lock)
+                engine_label="omnisim-sweep", lock=entry.lock,
+                hybrid_cache=self.hybrid)
         except Exception as exc:
             note = f"fallback re-simulation faulted: {exc!r}"
             self.quarantine.strike(entry.key, note)
             results_u, reasons_u = materialize_block(
                 entry.result, Du, status_u, cycles_u, violated_u,
                 np.zeros(len(Du), dtype=bool),
-                engine_label="omnisim-sweep", lock=entry.lock)
+                engine_label="omnisim-sweep", lock=entry.lock,
+                hybrid_cache=self.hybrid)
             for u in range(len(Du)):
                 if fb_mask[u] and status_u[u] != REUSED:
                     reasons_u[u] += f" [{note}]"
@@ -815,6 +868,8 @@ class BlockScheduler:
                 "timed_out_rows": self.stats_timed_out_rows,
                 "pool_respawns": self.stats_pool_respawns,
                 "blob_reships": self.stats_blob_reships,
+                "memo_hits": self.stats_memo_hits,
+                "memo_size": len(self._memo),
                 "shards": self.shards,
                 "mode": self.mode,
             }

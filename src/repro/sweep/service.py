@@ -191,7 +191,8 @@ class SweepService:
                  max_inflight_rows_per_tenant: Optional[int] = None,
                  max_queued_rows: Optional[int] = None,
                  default_deadline_s: Optional[float] = None,
-                 jax_interpret: bool = True):
+                 jax_interpret: bool = True,
+                 memo_capacity: int = 4096):
         self.cache = GraphCache(capacity=cache_capacity)
         quarantine = DesignQuarantine(threshold=quarantine_after,
                                       cooldown_s=quarantine_cooldown_s)
@@ -204,7 +205,9 @@ class SweepService:
                                         shard_timeout_s=shard_timeout_s,
                                         quarantine=quarantine,
                                         max_pool_respawns=max_pool_respawns,
-                                        jax_interpret=jax_interpret)
+                                        jax_interpret=jax_interpret,
+                                        memo_capacity=memo_capacity)
+        self.scheduler.hybrid = self.cache.hybrid
         self.admission = AdmissionController(
             max_inflight_rows_per_tenant=max_inflight_rows_per_tenant,
             max_queued_rows=max_queued_rows)
@@ -286,6 +289,24 @@ class SweepService:
         """Pre-populate the cache for ``design`` (cold-start off the
         request path); returns the warm entry."""
         return self.cache.get_or_build(design, key=key)
+
+    def edit_session(self, design: Program,
+                     key: Optional[str] = None) -> "EditSession":
+        """Open an interactive edit-and-resimulate session on ``design``.
+
+        Returns a :class:`repro.delta.EditSession`: call
+        ``update(new_program)`` after each code edit and the service
+        re-records only what the structural delta requires (exact-key hit
+        → per-module trace patch → cold rebuild, see ``repro.delta``),
+        then serve sweeps of the edited design through the handle's
+        ``submit``/``sweep`` passthroughs.  Patched graphs land in the
+        warm cache under the edited design's own fingerprint, so queued
+        rows against the pre-edit design are unaffected.
+        """
+        if self._stop.is_set():
+            raise RuntimeError("sweep service is closed")
+        from ..delta.session import EditSession
+        return EditSession(self, design, key=key)
 
     def _rejected_handle(self, D: np.ndarray, reason: str, tenant: str,
                          fallback: bool) -> SweepHandle:

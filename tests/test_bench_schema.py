@@ -86,6 +86,10 @@ REQUIRED_KEYS = {
     "query_periodization_speedup_nb_success_stream": numbers.Real,
     "query_periodization_bulk_queries_multisite_poll": numbers.Integral,
     "query_periodization_bulk_queries_nb_success_stream": numbers.Integral,
+    # PR 10: structural deltas — edit-and-resimulate (repro/delta)
+    "delta_resim_speedup_300": numbers.Real,
+    "delta_reuse_fraction_300": numbers.Real,
+    "delta_reject_rate": numbers.Real,
     # mode flag, not a measurement: the maxplus_sparse_* numbers come from
     # Pallas interpret mode (XLA on CPU) unless this is False
     "maxplus_sparse_jax_interpret": bool,

@@ -1,0 +1,322 @@
+"""Structural deltas & edit sessions (``repro/delta``, ISSUE 10).
+
+The contract: an edit served through the delta subsystem — fingerprint
+diff, per-module trace patch, served :class:`EditSession` — must be
+*bit-identical* to simulating the edited design from scratch, or it must
+reject to a cold rebuild (which is trivially bit-identical).  Stale reuse
+is never an acceptable failure mode; slow reuse is.
+
+Tier-1 runs every delta class at small scale plus the cache/scheduler
+integration; the 300-module differential sweep hides behind ``-m delta``.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import simulate
+from repro.core.program import Delay, Emit, Program, Read, ReadNB, Write
+from repro.core.trace import program_fingerprint
+from repro.corpus import (EDIT_KINDS, PATCHABLE_KINDS, edit_pairs,
+                          result_record)
+from repro.delta import (BODY_EDITED, RENAMED, RETYPED, UNCHANGED,
+                         EditSession, apply_patch, cold_build, diff,
+                         fingerprint_design, snapshot)
+from repro.sweep import GraphCache, SweepService
+
+
+def _manual_service(**kw):
+    kw.setdefault("autostart", False)
+    return SweepService(**kw)
+
+
+@pytest.fixture(scope="module")
+def pairs():
+    """One probe-selected base design, all seven edit classes on it."""
+    return {p.kind: p for p in edit_pairs(3, scale=28)}
+
+
+# ---------------------------------------------------------- fingerprint/diff
+def test_fingerprint_key_matches_program_fingerprint(pairs):
+    prog = pairs["delay"].base()
+    fps = fingerprint_design(prog)
+    assert fps.key == program_fingerprint(prog)
+    assert fps.module_names == tuple(m.name for m in prog.modules)
+
+
+def test_diff_identical_builders(pairs):
+    p = pairs["delay"]
+    d = diff(fingerprint_design(p.base()), fingerprint_design(p.base()))
+    assert d.identical and d.patchable and not d.edited
+    assert all(lbl == UNCHANGED for lbl in d.modules.values())
+
+
+def test_diff_classifies_body_edit(pairs):
+    p = pairs["delay"]
+    d = diff(fingerprint_design(p.base()), fingerprint_design(p.edited()))
+    assert d.patchable and not d.identical
+    assert BODY_EDITED in d.modules.values()
+    # a pure timing edit touches exactly the edited module
+    assert sum(1 for v in d.modules.values() if v != UNCHANGED) == 1
+
+
+def test_diff_classifies_retype_and_rename(pairs):
+    base = fingerprint_design(pairs["retype"].base())
+    d = diff(base, fingerprint_design(pairs["retype"].edited()))
+    assert d.patchable and RETYPED in [lbl for _, lbl in d.fifos]
+    assert all(lbl == UNCHANGED for lbl in d.modules.values())
+    d = diff(base, fingerprint_design(pairs["rename"].edited()))
+    assert not d.patchable and RENAMED in [lbl for _, lbl in d.fifos]
+    assert "renam" in d.reason
+
+
+def test_diff_rejects_topology_changes(pairs):
+    for kind in ("interface", "added", "removed"):
+        p = pairs[kind]
+        d = diff(fingerprint_design(p.base()), fingerprint_design(p.edited()))
+        assert not d.patchable, kind
+        assert d.reason, kind
+
+
+# ------------------------------------------------------- differential patch
+@pytest.mark.parametrize("kind", EDIT_KINDS)
+def test_patch_bit_identical_or_rejects(pairs, kind):
+    """Every edit class: a patched result equals the cold run bit-for-bit
+    (cycles, outputs, FIFO digests, stats); a reject falls back to cold."""
+    p = pairs[kind]
+    _, state = snapshot(p.base())
+    cold, _ = snapshot(p.edited())
+    out = apply_patch(state, p.edited())
+    if p.expect == "patched":
+        assert out.ok, (kind, out.reason)
+        assert result_record(out.result) == result_record(cold)
+        assert out.reused_modules >= out.total_modules - 1
+    else:
+        assert not out.ok and out.reason, kind
+    # the served answer is bit-identical either way
+    served = out.result if out.ok else cold
+    assert result_record(served) == result_record(cold)
+
+
+def test_patch_chains_from_patched_state(pairs):
+    """delta -> retype applied on top of a patched snapshot: each hop
+    verifies against its own cold run."""
+    d, r = pairs["delay"], pairs["retype"]
+    _, state = snapshot(d.base())
+    out1 = apply_patch(state, d.edited())
+    assert out1.ok
+    # retype pair shares the same base design, so its edited rows apply
+    # cleanly on top of the delay edit via a fresh builder combination
+    out2 = apply_patch(out1.state, d.base())     # edit it *back*
+    assert out2.ok, out2.reason
+    cold, _ = snapshot(d.base())
+    assert result_record(out2.result) == result_record(cold)
+
+
+def test_value_edit_reject_reason_names_the_stream(pairs):
+    p = pairs["value"]
+    _, state = snapshot(p.base())
+    out = apply_patch(state, p.edited())
+    assert not out.ok and "write stream" in out.reason
+
+
+# --------------------------------------------------------- delta-aware cache
+def test_cache_get_or_patch_tiers(pairs):
+    p = pairs["delay"]
+    cache = GraphCache(capacity=4)
+    fps0 = fingerprint_design(p.base())
+    look0 = cache.get_or_patch(p.base(), fps0, None)
+    assert look0.mode == "cold" and look0.state is not None
+    # tier 2: patch from the held state
+    fps1 = fingerprint_design(p.edited())
+    look1 = cache.get_or_patch(p.edited(), fps1, look0.state)
+    assert look1.mode == "patched"
+    assert look1.entry.key == fps1.key != fps0.key
+    # tier 1: the patched entry now answers the exact key
+    look2 = cache.get_or_patch(p.edited(), fps1, None)
+    assert look2.mode == "exact" and look2.entry is look1.entry
+    st = cache.stats()
+    assert st["delta_hits"] == 1 and st["delta_rejects"] == 0
+
+
+def test_cache_reject_falls_back_cold(pairs):
+    p = pairs["value"]
+    cache = GraphCache(capacity=4)
+    look0 = cache.get_or_patch(p.base(), fingerprint_design(p.base()), None)
+    look1 = cache.get_or_patch(p.edited(), fingerprint_design(p.edited()),
+                               look0.state)
+    assert look1.mode == "cold" and look1.reason
+    assert cache.stats()["delta_rejects"] == 1
+    ref = simulate(p.edited())
+    assert result_record(look1.entry.result) == result_record(ref)
+
+
+# ------------------------------------------------------------- edit sessions
+def _depth_block(prog, rows=4):
+    d0 = np.asarray(prog.depths(), dtype=np.int64)
+    return np.stack([np.maximum(d0 + k, 1) for k in range(rows)])
+
+
+def test_edit_session_serves_patched_design(pairs):
+    p = pairs["delay"]
+    with _manual_service(block=4) as svc:
+        sess = svc.edit_session(p.base())
+        D = _depth_block(p.base())
+        sess.sweep(D)                       # warm the base entry
+        out = sess.update(p.edited())
+        assert out.mode == "patched" and out.reuse_fraction >= 0.9
+        served = sess.sweep(D)
+    with _manual_service(block=4) as svc2:
+        ref = svc2.sweep(p.edited(), D)
+    assert (served.status == ref.status).all()
+    assert (served.cycles == ref.cycles).all()
+    for k in range(len(D)):
+        if ref.results[k] is not None:
+            assert served.results[k].outputs == ref.results[k].outputs
+
+
+def test_edit_session_modes_and_counts(pairs):
+    pd, pv = pairs["delay"], pairs["value"]
+    with _manual_service(block=4) as svc:
+        sess = svc.edit_session(pd.base())
+        assert sess.update(pd.base()).mode == "unchanged"
+        assert sess.update(pd.edited()).mode == "patched"
+        out = sess.update(pv.edited())      # value edit vs delay-edited state
+        assert out.mode == "cold" and out.reason
+        # back to a design the cache already holds: exact-key reuse
+        assert sess.update(pd.edited()).mode == "exact"
+        st = sess.stats()
+        assert st["unchanged"] == 1 and st["patched"] == 1
+        assert st["cold"] == 1 and st["rejected"] == 1 and st["exact"] == 1
+        cst = svc.stats()["cache"]
+        assert cst["delta_hits"] >= 1 and cst["delta_rejects"] >= 1
+
+
+def test_edit_session_dynamic_design_goes_cold():
+    """NB polling designs have no recorded snapshot: every edit rebuilds
+    cold, but exact-key reuse still works and nothing crashes."""
+    def build(d=10):
+        prog = Program("poll_edit", declared_type="B")
+        f = prog.fifo("f", 2)
+
+        @prog.module("p")
+        def p():
+            yield Delay(d)
+            yield Write(f, 42)
+
+        @prog.module("c")
+        def c():
+            polls = 0
+            while True:
+                ok, _v = yield ReadNB(f)
+                polls += 1
+                if ok:
+                    break
+            yield Emit("polls", polls)
+        return prog
+
+    with _manual_service(block=4) as svc:
+        sess = svc.edit_session(build())
+        assert sess.state is None
+        out = sess.update(build(d=20))
+        assert out.mode == "cold"
+        ref = simulate(build(d=20))
+        assert result_record(sess.entry.result) == result_record(ref)
+        assert sess.update(build(d=10)).mode == "exact"
+
+
+# ---------------------------------------------- scheduler cross-block memo
+def test_scheduler_memoizes_repeat_configs(pairs):
+    p = pairs["delay"]
+    D = _depth_block(p.base(), rows=3)
+    with _manual_service(block=2) as svc:
+        a = svc.sweep(p.base(), D)
+        assert svc.stats()["scheduler"]["memo_hits"] == 0
+        b = svc.sweep(p.base(), D)
+        assert svc.stats()["scheduler"]["memo_hits"] == len(D)
+        assert (a.status == b.status).all() and (a.cycles == b.cycles).all()
+        assert svc.stats()["scheduler"]["memo_size"] >= len(D)
+
+
+def test_scheduler_memo_disabled(pairs):
+    p = pairs["delay"]
+    D = _depth_block(p.base(), rows=3)
+    with _manual_service(block=2, memo_capacity=0) as svc:
+        svc.sweep(p.base(), D)
+        svc.sweep(p.base(), D)
+        assert svc.stats()["scheduler"]["memo_hits"] == 0
+
+
+def test_scheduler_memo_is_per_design_content(pairs):
+    """Same depth rows against base and edited designs must NOT share
+    memo entries — keys are (design key, depth row)."""
+    p = pairs["delay"]
+    D = _depth_block(p.base(), rows=2)
+    with _manual_service(block=2) as svc:
+        a = svc.sweep(p.base(), D)
+        b = svc.sweep(p.edited(), D)
+        assert svc.stats()["scheduler"]["memo_hits"] == 0
+        ra = simulate(p.base(), depths=list(map(int, D[0])))
+        rb = simulate(p.edited(), depths=list(map(int, D[0])))
+        assert a.cycles[0] == ra.cycles and b.cycles[0] == rb.cycles
+
+
+# ------------------------------------------------------------ full-run spill
+def test_cache_spills_full_run_for_dynamic_designs():
+    def build():
+        prog = Program("poll_spill", declared_type="B")
+        f = prog.fifo("f", 2)
+
+        @prog.module("p")
+        def p():
+            yield Delay(10)
+            yield Write(f, 7)
+
+        @prog.module("c")
+        def c():
+            polls = 0
+            while True:
+                ok, _v = yield ReadNB(f)
+                polls += 1
+                if ok:
+                    break
+            yield Emit("polls", polls)
+        return prog
+
+    cache = GraphCache(capacity=2)
+    entry = cache.get_or_build(build())
+    assert entry.result.engine == "omnisim-hybrid"
+    assert entry.full_run is not None
+    assert cache.stats()["full_runs"] == 1
+    # a hit reinstalls the spilled run into the shared HybridCache
+    cache.hybrid._full.clear()
+    assert cache.lookup(entry.key) is entry
+    assert cache.hybrid.peek_full(entry.key) is entry.full_run
+
+
+def test_traced_designs_have_no_full_run(pairs):
+    cache = GraphCache(capacity=2)
+    entry = cache.get_or_build(pairs["delay"].base())
+    assert entry.full_run is None
+
+
+# ------------------------------------------------------------- big tier
+@pytest.mark.delta
+@pytest.mark.parametrize("kind", EDIT_KINDS)
+def test_delta_differential_300(kind):
+    """300-module designs: every edit class, served answer bit-identical
+    to cold; patchable classes must reuse >= 90% of modules."""
+    p = {q.kind: q for q in edit_pairs(11, scale=300)}[kind]
+    _, state = snapshot(p.base())
+    t0 = time.perf_counter()
+    cold, _ = snapshot(p.edited())
+    t_cold = time.perf_counter() - t0
+    out = apply_patch(state, p.edited())
+    if kind in PATCHABLE_KINDS:
+        assert out.ok, out.reason
+        assert out.reuse_fraction >= 0.9
+        assert out.elapsed_s < max(t_cold, 1e-3) * 5
+    else:
+        assert not out.ok
+    served = out.result if out.ok else cold
+    assert result_record(served) == result_record(cold)

@@ -122,15 +122,18 @@ def test_doc_symbols_resolve(doc):
 
 
 def test_api_doc_covers_public_exports():
-    """Every name in repro.core.__all__ and repro.corpus.__all__ must be
-    mentioned in docs/api.md — new public API cannot ship undocumented."""
+    """Every name in repro.core.__all__, repro.corpus.__all__ and
+    repro.delta.__all__ must be mentioned in docs/api.md — new public API
+    cannot ship undocumented."""
     sys.path.insert(0, SRC)
     try:
         import repro.core as core
         import repro.corpus as corpus
+        import repro.delta as delta
         with open(os.path.join(REPO, "docs", "api.md")) as f:
             text = f.read()
-        missing = [n for n in list(core.__all__) + list(corpus.__all__)
+        missing = [n for n in (list(core.__all__) + list(corpus.__all__)
+                               + list(delta.__all__))
                    if n not in text]
         assert not missing, f"docs/api.md does not mention: {missing}"
     finally:

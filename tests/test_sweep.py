@@ -655,8 +655,8 @@ def test_graph_blob_never_mutates_shared_graph_two_threads(monkeypatch):
     base = simulate(producer_consumer(n=32, depth=2))
     cache = GraphCache()
     entry = cache.get_or_build(base)
-    batch_view = entry.graph.batch
-    assert batch_view is not None
+    batch_view = entry.batch          # lazy: built on first solver access
+    assert batch_view is not None and entry.graph.batch is batch_view
 
     real_dumps = pickle.dumps
     dumped_graph_batch = []
